@@ -1,0 +1,24 @@
+"""TokenScale core: the paper's contribution.
+
+  velocity     — Token Velocity metric + offline profiler (§III-B, §IV-B)
+  autoscaler   — TokenScale policy (Eq.2-4) + AIBrix/BlitzScale/DistServe
+  convertible  — Convertible Decoder planning (Eq.5-6, pool sizing)
+  router       — Alg.1 prefill routing, decode balancing, burst detector
+  predictor    — simulated output-length predictor (§IV-B1)
+  hardware     — chip profiles + analytic step-latency model
+"""
+from repro.core.autoscaler import (  # noqa: F401
+    AIBrixPolicy, BlitzScalePolicy, DistServePolicy, Observation, Policy,
+    ScaleDecision, TokenScalePolicy,
+)
+from repro.core.convertible import (  # noqa: F401
+    ConvertibleConfig, burst_ratio_of_trace, plan_convertible,
+)
+from repro.core.hardware import CHIPS, ChipSpec, InstanceSpec  # noqa: F401
+from repro.core.predictor import OutputPredictor  # noqa: F401
+from repro.core.router import (  # noqa: F401
+    TPOT_SLO, BurstDetector, Router, ttft_slo,
+)
+from repro.core.velocity import (  # noqa: F401
+    BUCKETS, VelocityProfile, bucket_lengths, bucket_of, profile,
+)

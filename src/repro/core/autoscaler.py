@@ -1,0 +1,197 @@
+"""Autoscaling policies: TokenScale (§IV-C) and the three baselines (§V).
+
+All policies consume the same ``Observation`` snapshot (what a metrics
+plane would report each interval) and output desired instance counts; the
+cluster simulator executes them with realistic startup latency.
+
+  * TokenScale  — velocity-ratio scaling, Eq.(2)-(4)
+  * DistServe   — RPS thresholds for both stages (Table I)
+  * AIBrix      — concurrency-based prefiller + GPU-memory-utilization
+                  (Knative KPA-style) decoder
+  * BlitzScale  — request-count thresholds for both stages + "live" scaling
+                  (scale-up start latency removed, §V Baselines)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+from repro.core.velocity import BUCKETS, VelocityProfile
+
+
+@dataclass
+class Observation:
+    """Rolling-window metrics snapshot handed to a policy every interval."""
+    t: float
+    # arrival-side (gateway measurements)
+    token_rate_in: float                 # input tok/s (1 s window)
+    token_rate_by_bucket: dict[str, float]  # in+predicted-out tok/s per bucket
+    rps: float                           # requests/s (1 s window)
+    # system-side
+    prefill_queue: int                   # requests queued/being prefilled
+    decode_inflight: int                 # requests in decode
+    mem_util: float                      # mean decoder HBM utilization [0,1]
+    ttft_p99: float = 0.0
+    tpot_p99: float = 0.0
+    cur_prefillers: int = 1
+    cur_decoders: int = 1
+
+
+@dataclass
+class ScaleDecision:
+    prefillers: int
+    decoders: int
+    live: bool = False    # BlitzScale: hide startup latency on scale-up
+
+
+class Policy:
+    name = "base"
+    def decide(self, obs: Observation) -> ScaleDecision:  # pragma: no cover
+        raise NotImplementedError
+
+
+class _DownHysteresis:
+    """Scale down only after the lower target persists for `delay` s."""
+    def __init__(self, delay: float = 5.0):
+        self.delay = delay
+        self._since: dict[str, float] = {}
+        self._pending: dict[str, int] = {}
+
+    def apply(self, key: str, cur: int, target: int, t: float) -> int:
+        if target >= cur:
+            self._since.pop(key, None)
+            return target
+        if key not in self._since or self._pending.get(key, -1) < target:
+            self._since[key] = t
+            self._pending[key] = target
+        if t - self._since[key] >= self.delay:
+            return target
+        return cur
+
+
+# ---------------------------------------------------------------------------
+# TokenScale (Eq. 2-4)
+# ---------------------------------------------------------------------------
+
+class TokenScalePolicy(Policy):
+    name = "tokenscale"
+
+    def __init__(self, profile: VelocityProfile, convertible: int = 1,
+                 min_prefillers: int = 1, min_decoders: int = 1,
+                 down_delay: float = 5.0):
+        self.prof = profile
+        self.convertible = convertible
+        self.min_p, self.min_d = min_prefillers, min_decoders
+        self.hyst = _DownHysteresis(down_delay)
+
+    def decide(self, obs: Observation) -> ScaleDecision:
+        # Eq. (2): prefillers from the input token arrival rate vs the
+        # slower of prefill/network velocity
+        v_eff = min(self.prof.v_prefill, self.prof.v_network)
+        i_p = math.ceil(obs.token_rate_in / max(v_eff, 1e-9))
+        # Eq. (3): decoders summed per bucket
+        i_d_f = sum(rate / max(self.prof.v_decode.get(b, 1e9), 1e-9)
+                    for b, rate in obs.token_rate_by_bucket.items())
+        i_d = math.ceil(i_d_f)
+        # Eq. (4): regular decoders net of the fixed convertible pool
+        i_d_reg = max(i_d - self.convertible, 0)
+        i_p = max(i_p, self.min_p)
+        i_d_reg = max(i_d_reg, self.min_d)
+        i_p = self.hyst.apply("p", obs.cur_prefillers, i_p, obs.t)
+        i_d_reg = self.hyst.apply("d", obs.cur_decoders, i_d_reg, obs.t)
+        return ScaleDecision(i_p, i_d_reg)
+
+
+# ---------------------------------------------------------------------------
+# DistServe: RPS thresholds (Table I)
+# ---------------------------------------------------------------------------
+
+class DistServePolicy(Policy):
+    name = "distserve"
+
+    def __init__(self, rps_per_prefiller: float = 14.0,
+                 rps_per_decoder: float = 28.0, down_delay: float = 5.0):
+        self.rp, self.rd = rps_per_prefiller, rps_per_decoder
+        self.hyst = _DownHysteresis(down_delay)
+
+    def decide(self, obs: Observation) -> ScaleDecision:
+        i_p = max(math.ceil(obs.rps / self.rp), 1)
+        i_d = max(math.ceil(obs.rps / self.rd), 1)
+        i_p = self.hyst.apply("p", obs.cur_prefillers, i_p, obs.t)
+        i_d = self.hyst.apply("d", obs.cur_decoders, i_d, obs.t)
+        return ScaleDecision(i_p, i_d)
+
+
+# ---------------------------------------------------------------------------
+# AIBrix: concurrency prefiller + memory-utilization decoder (Table I)
+# ---------------------------------------------------------------------------
+
+class AIBrixPolicy(Policy):
+    name = "aibrix"
+
+    def __init__(self, conc_per_prefiller: float = 7.0,
+                 mem_util_target: float = 0.7, window_s: float = 5.0,
+                 down_delay: float = 10.0):
+        self.cp = conc_per_prefiller
+        self.target = mem_util_target
+        self.window_s = window_s
+        self._hist: list[tuple[float, float, float]] = []
+        self.hyst = _DownHysteresis(down_delay)
+
+    def decide(self, obs: Observation) -> ScaleDecision:
+        # sliding-window average of concurrency and utilization — this is
+        # precisely why AIBrix lags bursts (§II-D)
+        self._hist.append((obs.t, float(obs.prefill_queue), obs.mem_util))
+        self._hist = [h for h in self._hist if obs.t - h[0] <= self.window_s]
+        conc = sum(h[1] for h in self._hist) / len(self._hist)
+        util = sum(h[2] for h in self._hist) / len(self._hist)
+        i_p = max(math.ceil(conc / self.cp), 1)
+        # KPA: desired = ceil(current * util / target)
+        i_d = max(math.ceil(obs.cur_decoders * util / self.target), 1)
+        i_p = self.hyst.apply("p", obs.cur_prefillers, i_p, obs.t)
+        i_d = self.hyst.apply("d", obs.cur_decoders, i_d, obs.t)
+        return ScaleDecision(i_p, i_d)
+
+
+# ---------------------------------------------------------------------------
+# BlitzScale: request-count thresholds + live scaling (Table I)
+# ---------------------------------------------------------------------------
+
+class ComboPolicy(Policy):
+    """Ablation helper (§VI-D): prefiller decisions from one policy,
+    decoder decisions from another (B, B+P, B+P+D configurations)."""
+
+    def __init__(self, p_policy: Policy, d_policy: Policy, name: str):
+        self.p_policy = p_policy
+        self.d_policy = d_policy
+        self.name = name
+
+    def decide(self, obs: Observation) -> ScaleDecision:
+        p = self.p_policy.decide(obs)
+        d = self.d_policy.decide(obs)
+        return ScaleDecision(p.prefillers, d.decoders,
+                             live=p.live or d.live)
+
+
+class BlitzScalePolicy(Policy):
+    name = "blitzscale"
+
+    def __init__(self, req_per_prefiller: float = 7.0,
+                 req_per_decoder: float = 45.0, window_s: float = 2.0,
+                 down_delay: float = 10.0):
+        self.rp, self.rd = req_per_prefiller, req_per_decoder
+        self.window_s = window_s
+        self._hist: list[tuple[float, float, float]] = []
+        self.hyst = _DownHysteresis(down_delay)
+
+    def decide(self, obs: Observation) -> ScaleDecision:
+        self._hist.append((obs.t, float(obs.prefill_queue),
+                           float(obs.decode_inflight)))
+        self._hist = [h for h in self._hist if obs.t - h[0] <= self.window_s]
+        conc_p = sum(h[1] for h in self._hist) / len(self._hist)
+        conc_d = sum(h[2] for h in self._hist) / len(self._hist)
+        i_p = max(math.ceil(conc_p / self.rp), 1)
+        i_d = max(math.ceil(conc_d / self.rd), 1)
+        i_p = self.hyst.apply("p", obs.cur_prefillers, i_p, obs.t)
+        i_d = self.hyst.apply("d", obs.cur_decoders, i_d, obs.t)
+        return ScaleDecision(i_p, i_d, live=True)

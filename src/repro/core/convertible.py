@@ -1,0 +1,74 @@
+"""Convertible Decoder management (§III-D, §IV-D).
+
+A Convertible Decoder is a decoder whose gateway routing can flip to accept
+prefill work in <1 ms (weights are shared).  The *restriction* that protects
+the co-located decode pool:
+
+  * chunk size     — largest chunk keeping mixed-iteration TPOT within SLO
+                     (profiled offline; ``velocity.convertible_chunk_size``)
+  * prefill speed  — Eq. (5): V_D^{P'} = (chunk - batch) / TPOT_SLO
+  * reserved HBM   — Eq. (6): Mem_R = V_D^{P'} * Mem_T * TTFT_SLO
+  * pool size      — offline: ceil(max decoders over the trace x burst
+                     ratio); NOT dynamically scaled (§IV-C2)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig
+from repro.core import hardware as hw
+from repro.core.hardware import InstanceSpec
+from repro.core.velocity import (convertible_chunk_size,
+                                 convertible_prefill_velocity,
+                                 reserved_memory)
+
+
+@dataclass(frozen=True)
+class ConvertibleConfig:
+    chunk_size: int
+    v_prefill: float          # Eq. (5)
+    mem_reserved: float       # Eq. (6), bytes
+    pool_size: int            # number of convertible decoders (fixed)
+
+
+def plan_convertible(cfg: ModelConfig, inst: InstanceSpec,
+                     expected_decode_batch: int, avg_ctx: float,
+                     burst_ratio: float, max_decoders: int,
+                     tpot_slo: float = 0.1,
+                     ttft_slo: float = 0.4) -> ConvertibleConfig:
+    """Offline planning for the convertible pool (§IV-C2 + §III-D)."""
+    chunk = convertible_chunk_size(cfg, inst, expected_decode_batch,
+                                   avg_ctx, tpot_slo)
+    v_dp = convertible_prefill_velocity(chunk, expected_decode_batch,
+                                        tpot_slo)
+    mem_t = hw.kv_bytes_per_token(cfg)
+    mem_r = reserved_memory(v_dp, mem_t, ttft_slo)
+    pool = max(int(math.ceil(max_decoders * burst_ratio)), 1)
+    return ConvertibleConfig(chunk_size=chunk, v_prefill=v_dp,
+                             mem_reserved=mem_r, pool_size=pool)
+
+
+def burst_ratio_of_trace(arrivals, window_s: float = 60.0,
+                         factor: float = 1.0) -> float:
+    """Fraction of tokens arriving above the running-average trendline
+    (the §II-C burst definition, used to size the pool offline)."""
+    import numpy as np
+    arrivals = sorted(arrivals, key=lambda r: r[0])
+    if not arrivals:
+        return 0.0
+    ts = np.array([a[0] for a in arrivals])
+    toks = np.array([a[1] for a in arrivals], dtype=np.float64)
+    t_end = ts.max() + 1e-9
+    grid = np.arange(0.0, t_end + 1.0, 1.0)
+    per_sec = np.zeros(len(grid))
+    idx = np.clip(np.searchsorted(grid, ts, side="right") - 1, 0,
+                  len(grid) - 1)
+    np.add.at(per_sec, idx, toks)
+    burst_tok = 0.0
+    for i in range(len(grid)):
+        lo = max(0, i - int(window_s))
+        avg = per_sec[lo:i + 1].mean()
+        if per_sec[i] > factor * avg:
+            burst_tok += per_sec[i] - factor * avg
+    return float(burst_tok / max(toks.sum(), 1e-9))

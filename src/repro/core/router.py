@@ -1,0 +1,96 @@
+"""Routing & load balancing (§IV-E) + the burst detector (§IV-A).
+
+Alg. 1 (prefill): two rounds — regular prefillers first, Convertible
+Decoders second, else queue.  Feasibility = estimated waiting time
+(in-flight tokens / stage velocity) within the request's TTFT SLO.
+
+Decode: predict the request's bucket, route to the decoder with the fewest
+in-flight requests *of that bucket*; Convertible Decoders are excluded once
+their memory utilization crosses a threshold, and prioritize decode over
+prefill on-box.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Protocol
+
+
+def ttft_slo(in_len: int) -> float:
+    """SLO standards from §V (DynamoLLM/MLPerf): 250/400/2000 ms."""
+    if in_len < 256:
+        return 0.25
+    if in_len < 1024:
+        return 0.40
+    return 2.0
+
+
+TPOT_SLO = 0.1
+
+
+class PrefillTarget(Protocol):
+    def inflight_tokens(self) -> float: ...
+    def prefill_velocity(self) -> float: ...
+
+
+@dataclass
+class BurstDetector:
+    """Short-window rate vs long-window running average (§II-C methodology:
+    spikes above the running average are bursts)."""
+    short_s: float = 1.0
+    long_s: float = 60.0
+    factor: float = 1.5
+    _events: list[tuple[float, float]] = field(default_factory=list)
+
+    def observe(self, t: float, tokens: float):
+        self._events.append((t, tokens))
+        self._events = [e for e in self._events if t - e[0] <= self.long_s]
+
+    def rates(self, t: float) -> tuple[float, float]:
+        short = sum(v for ts, v in self._events if t - ts <= self.short_s) \
+            / self.short_s
+        horizon = min(self.long_s, max(t, 1.0))
+        long = sum(v for ts, v in self._events) / horizon
+        return short, long
+
+    def is_burst(self, t: float) -> bool:
+        short, long = self.rates(t)
+        return short > self.factor * max(long, 1e-9)
+
+
+class Router:
+    """Alg. 1 + decode load balancing."""
+
+    def __init__(self, burst_detector: Optional[BurstDetector] = None):
+        self.burst = burst_detector or BurstDetector()
+
+    # ---- Alg. 1 ------------------------------------------------------
+    def route_prefill(self, in_len: int, prefillers: list,
+                      convertibles: list, now: float):
+        """Returns (target, kind) with kind in {"prefiller", "convertible",
+        None}; None means queue (line 15)."""
+        slo = ttft_slo(in_len)
+        for p in prefillers:                      # round 1 (lines 1-7)
+            wait = p.inflight_tokens() / max(p.prefill_velocity(), 1e-9)
+            if wait <= slo:
+                return p, "prefiller"
+        for d in convertibles:                    # round 2 (lines 8-14)
+            wait = d.inflight_tokens() / max(d.prefill_velocity(), 1e-9)
+            if wait <= slo:
+                return d, "convertible"
+        return None, None                         # line 15: enqueue
+
+    # ---- decode load balancing ----------------------------------------
+    def route_decode(self, bucket: str, decoders: list,
+                     mem_threshold: float = 0.9):
+        """Fewest in-flight requests of `bucket`; convertibles excluded
+        above the memory threshold."""
+        candidates = [d for d in decoders
+                      if not (getattr(d, "is_convertible", False)
+                              and d.mem_util() > mem_threshold)]
+        if not candidates:
+            candidates = decoders
+        if not candidates:
+            return None
+        return min(candidates,
+                   key=lambda d: (d.inflight_of_bucket(bucket),
+                                  d.mem_util()))

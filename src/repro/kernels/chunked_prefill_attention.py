@@ -1,0 +1,135 @@
+"""Chunked-prefill flash attention — the Convertible Decoder's hot kernel.
+
+One kernel covers the whole prefill family:
+  * whole-prompt prefill          (offset = 0, Skv = Sq)
+  * restricted chunked prefill    (offset = chunk start, keys = live cache)
+  * sliding-window (local) layers (window > 0, e.g. gemma-2)
+  * softcapped attention          (softcap > 0)
+
+TPU mapping: flash-attention with a 4D grid (batch, q_head, q_block,
+kv_block); the kv_block axis is innermost and iterated sequentially on TPU,
+so the online-softmax running stats (m, l) and the output accumulator live
+in VMEM scratch that persists across kv steps.  Q blocks are
+(BQ=128, D) and KV blocks (BK=128, D): MXU-aligned (128 lanes), three
+f32 accumulators + two input tiles ≈ (128*128)*4B*4 ≈ 256 KiB — comfortably
+inside the ~16 MiB v5e VMEM budget with double buffering.
+
+Per-batch `offset` and `lengths` ride in SMEM; masking is computed from
+broadcasted iotas against absolute positions, which is what lets the SAME
+kernel serve both the prefiller instances and the convertible decoder's
+restricted chunks.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+
+
+def _kernel(off_ref, len_ref,                      # SMEM scalars (per batch)
+            q_ref, k_ref, v_ref,                   # VMEM blocks
+            o_ref,                                 # VMEM out block
+            acc, m_s, l_s,                         # scratch
+            *, scale: float, window: int, softcap: float,
+            bq: int, bk: int):
+    ki = pl.program_id(3)
+    qi = pl.program_id(2)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32)             # (BQ, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)             # (BK, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)             # (BK, D)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+
+    offset = off_ref[0]
+    length = len_ref[0]
+    q_pos = offset + qi * bq + jax.lax.broadcasted_iota(jnp.int32,
+                                                        (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = (k_pos <= q_pos) & (k_pos < length)
+    if window:
+        mask &= k_pos > (q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_s[...]                                      # (BQ, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                                 # (BQ, BK)
+    l_s[...] = l_s[...] * alpha + p.sum(axis=1, keepdims=True)
+    m_s[...] = m_new
+    acc[...] = acc[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        l = jnp.maximum(l_s[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc[...] / l).astype(o_ref.dtype)
+
+
+def chunked_prefill_attention(
+        q: jax.Array,            # (B, Sq, Hq, D)
+        k: jax.Array,            # (B, Skv, Hkv, D)
+        v: jax.Array,
+        offset: jax.Array,       # (B,) int32
+        lengths: jax.Array,      # (B,) int32
+        window: int = 0,
+        softcap: float = 0.0,
+        scale: Optional[float] = None,
+        block_q: int = DEFAULT_BQ,
+        block_k: int = DEFAULT_BK,
+        interpret: bool = False) -> jax.Array:
+    B, Sq, Hq, D = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0 and Sq % block_q == 0 and Skv % block_k == 0, (
+        q.shape, k.shape, block_q, block_k)
+    scale = scale if scale is not None else D ** -0.5
+    grid = (B, Hq, Sq // block_q, Skv // block_k)
+    group = Hq // Hkv
+
+    kern = functools.partial(
+        _kernel, scale=scale, window=window, softcap=softcap,
+        bq=block_q, bk=block_k)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, qi, ki: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1,), lambda b, h, qi, ki: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, block_q, 1, D),
+                         lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D),
+                         lambda b, h, qi, ki: (b, ki, h // group, 0)),
+            pl.BlockSpec((1, block_k, 1, D),
+                         lambda b, h, qi, ki: (b, ki, h // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, D),
+                               lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(offset.astype(jnp.int32), lengths.astype(jnp.int32), q, k, v)

@@ -1,0 +1,116 @@
+"""Flash-decode attention — the memory-bound decode hot-spot.
+
+Decode reads the whole KV cache once per step: the roofline is HBM
+bandwidth.  The kernel splits the cache sequence into BK-sized blocks
+(grid innermost axis) and streams them HBM->VMEM while a (G, D) output
+accumulator for one (batch, kv_head) group lives in VMEM scratch — the
+flash-decoding scheme adapted to TPU block semantics.  G = Hq/Hkv query
+heads share one KV head (GQA), so the MXU operates on (G, BK) score tiles;
+for MQA (G=Hq) this becomes a single dense (Hq, BK) tile — ideal.
+
+`cur_lens` rides in SMEM; a block whose positions all exceed cur_len is
+skipped entirely (@pl.when), so per-step work is O(cur_len), not O(max_len)
+— this is what makes the 32k/500k decode shapes bandwidth- rather than
+padding-bound.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+DEFAULT_BK = 256
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s,
+            *, scale: float, window: int, softcap: float, bk: int):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    cur = len_ref[0]
+
+    @pl.when(ki == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    # skip blocks entirely beyond the live cache (or behind the window)
+    blk_lo = ki * bk
+    live = blk_lo <= cur
+    if window:
+        live &= (blk_lo + bk) > (cur - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0, :, :].astype(jnp.float32)          # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # (BK, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)          # (BK, D)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = blk_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = k_pos <= cur
+        if window:
+            mask &= k_pos > (cur - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_s[...] = l_s[...] * alpha + p.sum(axis=1, keepdims=True)
+        m_s[...] = m_new
+        acc[...] = acc[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        l = jnp.maximum(l_s[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention(
+        q: jax.Array,            # (B, Hq, D)
+        k: jax.Array,            # (B, L, Hkv, D)
+        v: jax.Array,
+        cur_lens: jax.Array,     # (B,) int32
+        window: int = 0,
+        softcap: float = 0.0,
+        scale: Optional[float] = None,
+        block_k: int = DEFAULT_BK,
+        interpret: bool = False) -> jax.Array:
+    B, Hq, D = q.shape
+    L, Hkv = k.shape[1], k.shape[2]
+    assert Hq % Hkv == 0 and L % block_k == 0, (q.shape, k.shape, block_k)
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Hkv, G, D)
+    grid = (B, Hkv, L // block_k)
+    kern = functools.partial(_kernel, scale=scale, window=window,
+                             softcap=softcap, bk=block_k)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, ki: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, ki: (b, ki, h, 0)),
+            pl.BlockSpec((1, block_k, 1, D), lambda b, h, ki: (b, ki, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(cur_lens.astype(jnp.int32), qg, k, v)
+    return out.reshape(B, Hq, D)

@@ -1,0 +1,87 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding to block multiples, layout massaging from the model's
+(B, S, H, D) convention, and the interpret switch (CPU containers execute
+kernel bodies in Python via interpret=True; on TPU the same call compiles
+to Mosaic).  ``use_pallas()`` is the runtime toggle the model layer reads.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.chunked_prefill_attention import chunked_prefill_attention
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.wkv6 import wkv6
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def use_pallas() -> bool:
+    return os.environ.get("REPRO_USE_PALLAS", "0") == "1"
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "scale",
+                                             "block_q", "block_k"))
+def prefill_attention(q, k, v, offset, lengths, window: int = 0,
+                      softcap: float = 0.0, scale: Optional[float] = None,
+                      block_q: int = 128, block_k: int = 128):
+    """(B,Sq,Hq,D) x (B,Skv,Hkv,D) chunked/whole prefill attention."""
+    B, Sq, Hq, D = q.shape
+    bq = min(block_q, max(8, 1 << (Sq - 1).bit_length()))
+    bk = min(block_k, max(8, 1 << (k.shape[1] - 1).bit_length()))
+    qp = _pad_to(q, bq, 1)
+    kp = _pad_to(k, bk, 1)
+    vp = _pad_to(v, bk, 1)
+    out = chunked_prefill_attention(
+        qp, kp, vp, offset, lengths, window=window, softcap=softcap,
+        scale=scale, block_q=bq, block_k=bk, interpret=_INTERPRET)
+    return out[:, :Sq]
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "scale",
+                                             "block_k"))
+def decode_attention_op(q, k, v, cur_lens, window: int = 0,
+                        softcap: float = 0.0, scale: Optional[float] = None,
+                        block_k: int = 256):
+    """(B,Hq,D) single-token decode against a (B,L,Hkv,D) cache."""
+    bk = min(block_k, max(8, 1 << (k.shape[1] - 1).bit_length()))
+    kp = _pad_to(k, bk, 1)
+    vp = _pad_to(v, bk, 1)
+    return decode_attention(q, kp, vp, cur_lens, window=window,
+                            softcap=softcap, scale=scale, block_k=bk,
+                            interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def wkv6_op(r, k, v, w, u, s0, chunk: int = 16):
+    """(B,S,H,K)-layout WKV6 (matches models.ops.rwkv_wkv call shapes).
+
+    Pads S to the chunk multiple with w=1 (no decay), k=0 (no state write)
+    so padding cannot disturb the carry."""
+    B, S, H, K = r.shape
+    pad = (-S) % chunk
+    tr = lambda x: x.transpose(0, 2, 1, 3)  # noqa: E731  (B,H,S,K)
+    rp, kp2, vp, wp = tr(r), tr(k), tr(v), tr(w)
+    if pad:
+        zeros = jnp.zeros((B, H, pad, K), r.dtype)
+        ones = jnp.ones((B, H, pad, K), w.dtype)
+        rp = jnp.concatenate([rp, zeros], axis=2)
+        kp2 = jnp.concatenate([kp2, zeros], axis=2)
+        vp = jnp.concatenate([vp, zeros], axis=2)
+        wp = jnp.concatenate([wp, ones], axis=2)
+    y, sT = wkv6(rp, kp2, vp, wp, u, s0, chunk=chunk, interpret=_INTERPRET)
+    return y[:, :, :S].transpose(0, 2, 1, 3), sT

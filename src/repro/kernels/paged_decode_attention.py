@@ -1,0 +1,122 @@
+"""Paged flash-decode attention — block-table KV pool, TPU layout.
+
+Like ``decode_attention`` but the cache lives in a shared block pool
+(serving/paged.py): each grid step processes one 128-token page whose pool
+index comes from the request's block table (SMEM).  Pages beyond the live
+length — and unallocated (-1) table entries — are skipped with @pl.when, so
+per-step HBM traffic is exactly the request's resident pages: paging adds
+zero overhead to the decode roofline while eliminating allocation
+fragmentation.
+
+Grid: (num_requests, Hkv, max_blocks_per_request); online-softmax
+accumulators in VMEM scratch persist across the page axis.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0 ** 30
+
+
+def paged_decode_attention(
+        q: jax.Array,             # (B, Hq, D)
+        pool_k: jax.Array,        # (num_blocks, BS, Hkv, D)
+        pool_v: jax.Array,
+        tables: jax.Array,        # (B, max_blocks) int32, -1 = unallocated
+        cur_lens: jax.Array,      # (B,) int32
+        scale: Optional[float] = None,
+        interpret: bool = False) -> jax.Array:
+    B, Hq, D = q.shape
+    NB, BS, Hkv, _ = pool_k.shape
+    MB = tables.shape[1]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qg = q.reshape(B, Hkv, G, D)
+    kern = functools.partial(_kernel_with_prefetch, bs=BS, scale=scale)
+
+    # page indirection: the index_map reads the block table (scalar
+    # prefetch) to pick which pool page this grid step streams in
+    grid = (B, Hkv, MB)
+
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, D),
+                             lambda b, h, bi, tr, lr: (b, h, 0, 0)),
+                pl.BlockSpec((1, BS, 1, D),
+                             lambda b, h, bi, tr, lr:
+                             (jnp.maximum(tr[b, bi], 0), 0, h, 0)),
+                pl.BlockSpec((1, BS, 1, D),
+                             lambda b, h, bi, tr, lr:
+                             (jnp.maximum(tr[b, bi], 0), 0, h, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, D),
+                                   lambda b, h, bi, tr, lr: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((G, D), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, D), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), cur_lens.astype(jnp.int32),
+      qg, pool_k, pool_v)
+    return out.reshape(B, Hq, D)
+
+
+def _kernel_with_prefetch(table_ref, len_ref, q_ref, pk_ref, pv_ref,
+                          o_ref, acc, m_s, l_s, *, bs, scale):
+    # (kept for clarity: PrefetchScalarGridSpec passes the scalar refs
+    # first; the shared body reads per-request entries)
+    b = pl.program_id(0)
+    bi = pl.program_id(2)
+    nb = pl.num_programs(2)
+    cur = len_ref[b]
+    blk = table_ref[b, bi]
+    _body(q_ref, pk_ref, pv_ref, o_ref, acc, m_s, l_s,
+          bi=bi, nb=nb, cur=cur, blk=blk, bs=bs, scale=scale)
+
+
+def _body(q_ref, pk_ref, pv_ref, o_ref, acc, m_s, l_s, *,
+          bi, nb, cur, blk, bs, scale):
+    @pl.when(bi == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    live = (blk >= 0) & (bi * bs <= cur)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = pk_ref[0, :, 0, :].astype(jnp.float32)
+        v = pv_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = bi * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos <= cur, s, NEG_INF)
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_s[...] = l_s[...] * alpha + p.sum(axis=1, keepdims=True)
+        m_s[...] = m_new
+        acc[...] = acc[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(bi == nb - 1)
+    def _done():
+        o_ref[0, 0] = (acc[...] / jnp.maximum(l_s[...], 1e-30)
+                       ).astype(o_ref.dtype)

@@ -1,0 +1,3 @@
+from repro.launch.mesh import (  # noqa: F401
+    act_rules, batch_axes, make_production_mesh, needs_fsdp, param_rules,
+)

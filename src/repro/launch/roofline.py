@@ -1,0 +1,489 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (all per-chip — the
+optimized HLO module is the per-device program after SPMD partitioning):
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+  memory     = HLO_bytes_per_chip / HBM_bw
+  collective = collective_bytes_per_chip / link_bw
+
+``compiled.cost_analysis()`` counts every while body ONCE (verified
+empirically), so scanned depth would be undercounted ~num_blocks-fold.  We
+therefore parse the optimized HLO ourselves:
+
+  * instructions are attributed to their computation; a call graph is built
+    from while ``body=``/``condition=``, fusion ``calls=``, and
+    ``to_apply=`` edges; while trip counts come from the
+    ``known_trip_count`` backend_config the scan lowering emits;
+  * FLOPs  = sum over ``dot`` ops of 2 * |out| * K (K = product of the lhs
+    contracting dims, resolved through the operand-definition map), times
+    the enclosing computation's execution multiplier;
+  * HBM bytes = sum of output+operand bytes of executed data ops (fusions,
+    dots, copies, slices, collectives excluded) — an HBM-traffic estimate;
+  * collective bytes = sum of collective output bytes x multiplier.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "iota",
+    # `copy` of while-carried buffers is a CPU-backend aliasing artifact:
+    # TPU memory-space assignment updates caches in place.  Genuine data
+    # movement surfaces through fusion I/O, which we do count.
+    "copy", "copy-start", "copy-done",
+} | set(COLLECTIVE_OPS) | {f"{c}-start" for c in COLLECTIVE_OPS} \
+  | {f"{c}-done" for c in COLLECTIVE_OPS}
+
+_SHAPE_TOKEN = re.compile(r"^\(?([a-z0-9]+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{$")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OP_NAME = re.compile(r"^\s*([\w\-]+)\(")
+
+
+def _parse_instr(line: str):
+    """Parse `[ROOT] %name = SHAPE op(...)...` robustly.
+
+    Tuple shapes embed `/*index=N*/` comments (which contain '=' and
+    defeat naive regexes), so the shape is scanned with paren balancing."""
+    s = line
+    if s.startswith("ROOT "):
+        s = s[5:]
+    if not s.startswith("%"):
+        return None
+    eq = s.find(" = ")
+    if eq < 0:
+        return None
+    name = s[1:eq].strip()
+    rest = s[eq + 3:]
+    if rest.startswith("("):          # tuple shape: scan to matching paren
+        depth = 0
+        end = -1
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        if end < 0:
+            return None
+        shape = rest[:end + 1]
+        tail = rest[end + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape = rest[:sp]
+        tail = rest[sp:]
+    m = _OP_NAME.match(tail)
+    if not m:
+        return None
+    op = m.group(1)
+    body = tail[m.end():]
+    return name, shape, op, body
+
+
+def _tuple_shapes(shape_str: str) -> list[str]:
+    return re.findall(r"[a-z0-9]+\[[\d,]*\]", shape_str)
+
+
+def _shape_bytes(shape_str: str) -> float:
+    total = 0.0
+    for tok in _tuple_shapes(shape_str):
+        m = _SHAPE_TOKEN.match(tok)
+        if not m or m.group(1) not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if m.group(2):
+            for d in m.group(2).split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_TOKEN.match(shape_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+@dataclass
+class Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str          # raw text after the opening paren
+    is_root: bool = False
+
+
+@dataclass
+class HLOModule:
+    comps: dict[str, list[Instr]]
+    entry: Optional[str]
+    defs: dict[str, str]                       # %name -> shape str
+    edges: dict[str, list[tuple[str, float]]]  # comp -> [(callee, times)]
+    fused: set = field(default_factory=set)    # fusion/to_apply targets:
+                                               # internal instrs are not
+                                               # separate HBM transactions
+
+    def multipliers(self) -> dict[str, float]:
+        mult: dict[str, float] = {}
+
+        def visit(c: str, m: float):
+            if mult.get(c, 0.0) >= m:
+                return
+            mult[c] = m
+            for callee, times in self.edges.get(c, []):
+                visit(callee, m * times)
+
+        if self.entry:
+            visit(self.entry, 1.0)
+        return mult
+
+
+def parse_hlo(text: str) -> HLOModule:
+    comps: dict[str, list[Instr]] = {}
+    defs: dict[str, str] = {}
+    edges: dict[str, list[tuple[str, float]]] = {}
+    fused: set = set()
+    entry = None
+    cur: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                edges[cur] = []
+                if m.group(1):
+                    entry = cur
+            continue
+        if line == "}":
+            cur = None
+            continue
+        parsed = _parse_instr(line)
+        if not parsed:
+            continue
+        name, shape, op, rest = parsed
+        comps[cur].append(Instr(name, shape, op, rest,
+                                is_root=line.startswith("ROOT ")))
+        defs[name] = shape
+        # call-graph edges
+        if op == "while":
+            bm = re.search(r"body=%?([\w\.\-]+)", rest)
+            trips = 1.0
+            tm = _TRIP.search(rest)
+            if tm:
+                trips = float(tm.group(1))
+            if bm:
+                edges[cur].append((bm.group(1), trips))
+            cm = re.search(r"condition=%?([\w\.\-]+)", rest)
+            if cm:
+                edges[cur].append((cm.group(1), trips))
+        else:
+            for attr in ("calls", "to_apply", "body", "condition"):
+                am = re.search(rf"{attr}=%?([\w\.\-]+)", rest)
+                if am:
+                    edges[cur].append((am.group(1), 1.0))
+                    if attr in ("calls", "to_apply"):
+                        fused.add(am.group(1))
+    return HLOModule(comps, entry, defs, edges, fused)
+
+
+def _operand_names(rest: str) -> list[str]:
+    # operands are inside the call parens, referenced as %name
+    depth, end = 1, 0
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return re.findall(r"%([\w\.\-]+)", rest[:end])
+
+
+@dataclass
+class RooflineCounts:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: dict[str, float] = field(default_factory=dict)
+    collective_counts: dict[str, float] = field(default_factory=dict)
+    detail: Optional[dict] = None      # (op, shape, mult) -> bytes
+
+
+_SLICE_OPS = {"dynamic-slice", "slice", "gather"}
+
+
+@dataclass
+class _CompIO:
+    """Effective read behavior of a (fused) computation.
+
+    param_read[i] = bytes actually read from parameter i (None = all of
+    it).  A parameter consumed ONLY by slice/gather ops is charged the
+    slice outputs, not the full buffer — this is what keeps scanned
+    stacked-weight reads from being charged num_blocks times over."""
+    param_read: dict[int, Optional[float]]
+
+
+_PASSTHRU = ("bitcast", "copy", "convert", "reshape", "transpose")
+
+
+def _comp_io(instrs: list[Instr]) -> _CompIO:
+    params: dict[str, int] = {}
+    for ins in instrs:
+        if ins.op == "parameter":
+            m = re.match(r"\s*(\d+)", ins.rest)
+            if m:
+                params[ins.name] = int(m.group(1))
+
+    def uses_of(name: str) -> list[Instr]:
+        return [i for i in instrs if i.op != "parameter"
+                and re.search(rf"%{re.escape(name)}\b", i.rest)]
+
+    def charge(name: str, depth: int = 0) -> Optional[float]:
+        """Bytes read through `name`; None = treat as full read."""
+        if depth > 4:
+            return None
+        total = 0.0
+        used_by = uses_of(name)
+        if not used_by:
+            return 0.0
+        for u in used_by:
+            if u.op in _SLICE_OPS:
+                total += _shape_bytes(u.shape)
+            elif u.op in ("dynamic-update-slice", "scatter"):
+                ops = _operand_names(u.rest)
+                if ops and ops[0] == name:
+                    # destination of an in-place cache update: aliased,
+                    # only the updated region moves (charged at the root)
+                    continue
+                return None
+            elif u.op in _PASSTHRU:
+                sub = charge(u.name, depth + 1)
+                if sub is None:
+                    return None
+                total += sub
+            elif u.op == "tuple":
+                continue      # repackaging, typically aliased
+            else:
+                return None
+        return total
+
+    reads: dict[int, Optional[float]] = {}
+    for pname, idx in params.items():
+        reads[idx] = charge(pname)
+    return _CompIO(reads)
+
+
+def analyze_hlo(text: str, detail: bool = False) -> RooflineCounts:
+    mod = parse_hlo(text)
+    mult = mod.multipliers()
+    io_cache: dict[str, _CompIO] = {}
+
+    def io_of(comp: str) -> Optional[_CompIO]:
+        if comp not in mod.comps:
+            return None
+        if comp not in io_cache:
+            io_cache[comp] = _comp_io(mod.comps[comp])
+        return io_cache[comp]
+
+    def _resolve(instrs: list[Instr], name: str) -> Optional[Instr]:
+        for i2 in instrs:
+            if i2.name == name:
+                return i2
+        return None
+
+    def _chain_bytes(instrs, ins: Instr, depth: int = 0) -> Optional[float]:
+        """Effective bytes written through `ins` as a computation output:
+        dynamic-update-slice / scatter chains write only their update
+        region (the buffer is aliased in place); tuples sum their parts.
+        None = could not prove in-place-ness, charge the full shape."""
+        if depth > 6:
+            return None
+        if ins.op in ("dynamic-update-slice", "scatter"):
+            ops = _operand_names(ins.rest)
+            idx = 1 if ins.op == "dynamic-update-slice" else 2
+            if len(ops) > idx:
+                return 2.0 * _shape_bytes(mod.defs.get(ops[idx], ""))
+            return None
+        if ins.op in ("bitcast", "copy", "convert"):
+            ops = _operand_names(ins.rest)
+            nxt = _resolve(instrs, ops[0]) if ops else None
+            if nxt is None:
+                return None
+            return _chain_bytes(instrs, nxt, depth + 1)
+        if ins.op == "tuple":
+            total = 0.0
+            for o in _operand_names(ins.rest):
+                nxt = _resolve(instrs, o)
+                sub = _chain_bytes(instrs, nxt, depth + 1) \
+                    if nxt is not None else None
+                if sub is None:
+                    total += _shape_bytes(mod.defs.get(o, ""))
+                else:
+                    total += sub
+            return total
+        return None
+
+    def dus_write_bytes(instrs: list[Instr]) -> Optional[float]:
+        root = next((i for i in instrs if i.is_root), None)
+        if root is None:
+            return None
+        return _chain_bytes(instrs, root)
+
+    out = RooflineCounts(detail={} if detail else None)
+    for cname, instrs in mod.comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0.0:
+            continue
+        in_fusion = cname in mod.fused
+        for ins in instrs:
+            if ins.op == "dot":
+                k = 1
+                cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+                ops = _operand_names(ins.rest)
+                if cd and ops:
+                    dims = _shape_dims(mod.defs.get(ops[0], ""))
+                    for d in cd.group(1).split(","):
+                        if d and int(d) < len(dims):
+                            k *= dims[int(d)]
+                n_out = _shape_bytes(ins.shape) / max(
+                    _dtype_size(ins.shape), 1)
+                out.flops += 2.0 * n_out * k * m
+            base_op = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            if base_op in COLLECTIVE_OPS:
+                nbytes = _shape_bytes(ins.shape)
+                out.collective_bytes += nbytes * m
+                out.collectives[base_op] = \
+                    out.collectives.get(base_op, 0.0) + nbytes * m
+                out.collective_counts[base_op] = \
+                    out.collective_counts.get(base_op, 0.0) + m
+                continue
+            if ins.op in _SKIP_BYTES_OPS or in_fusion:
+                continue   # fusion internals live in VMEM/registers
+            operands = _operand_names(ins.rest)
+            if ins.op == "fusion":
+                callee = re.search(r"calls=%?([\w\.\-]+)", ins.rest)
+                cio = io_of(callee.group(1)) if callee else None
+                wb = dus_write_bytes(mod.comps[callee.group(1)]) \
+                    if callee and callee.group(1) in mod.comps else None
+                nbytes = wb if wb is not None else _shape_bytes(ins.shape)
+                for j, opnd in enumerate(operands):
+                    full = _shape_bytes(mod.defs.get(opnd, ""))
+                    if cio is not None and j in cio.param_read \
+                            and cio.param_read[j] is not None:
+                        nbytes += min(cio.param_read[j], full)
+                    else:
+                        nbytes += full
+            elif ins.op in _SLICE_OPS:
+                nbytes = 2.0 * _shape_bytes(ins.shape)  # read + write slice
+            elif ins.op == "dynamic-update-slice":
+                upd = _shape_bytes(mod.defs.get(operands[1], "")) \
+                    if len(operands) >= 2 else _shape_bytes(ins.shape)
+                nbytes = 2.0 * upd
+            else:
+                nbytes = _shape_bytes(ins.shape)
+                for opnd in operands:
+                    nbytes += _shape_bytes(mod.defs.get(opnd, ""))
+            out.hbm_bytes += nbytes * m
+            if out.detail is not None:
+                key = (ins.op, ins.shape[:60], int(m))
+                out.detail[key] = out.detail.get(key, 0.0) + nbytes * m
+    return out
+
+
+def _dtype_size(shape_str: str) -> int:
+    m = _SHAPE_TOKEN.match(shape_str)
+    return _DTYPE_BYTES.get(m.group(1), 4) if m else 4
+
+
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    model_flops: float               # 6·N_active·D (train) / 2·N_active·D
+    memory_stats: Optional[dict] = None
+    collectives: Optional[dict] = None
+    cost_analysis_flops: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_chip / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (global HLO flops) — remat/redundancy waste."""
+        return self.model_flops / max(self.flops_per_chip * self.chips, 1.0)
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "hlo_flops_global": self.flops_per_chip * self.chips,
+            "useful_ratio": self.useful_flops_ratio,
+            "collective_bytes_per_chip": self.collective_bytes_per_chip,
+            "collectives": self.collectives,
+            "memory": self.memory_stats,
+        }
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N_active·D for training, 2·N_active·D per forward."""
+    n_act = cfg.param_counts()["active"]
+    if shape.kind == "train":
+        return 6.0 * n_act * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_act * shape.global_batch * shape.seq_len
+    return 2.0 * n_act * shape.global_batch      # decode: one token

@@ -1,0 +1,4 @@
+from repro.models.transformer import (  # noqa: F401
+    abstract_params, abstract_state, count_params, decode_step, forward_train,
+    greedy_generate, init_params, init_state, param_axes, prefill, state_axes,
+)

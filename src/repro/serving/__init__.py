@@ -1,0 +1,7 @@
+from repro.serving.engine import Engine, Request  # noqa: F401
+from repro.serving.disagg import (  # noqa: F401
+    DecoderAdapter, PDCluster, PrefillerInstance,
+)
+from repro.serving.kvtransfer import (  # noqa: F401
+    KVPayload, TransferStats, extract, insert, payload_bytes, transfer,
+)

@@ -1,0 +1,126 @@
+"""KV-Cache / recurrent-state transfer between PD instances.
+
+The paper moves KVC from prefillers to decoders over NVLink/RDMA (LMCache +
+NIXL, §IV-F); on the TPU target this is an ICI point-to-point transfer.  On
+this CPU host the "wire" is a device-local buffer donation, but the
+*interface* is the production one:
+
+    payload = extract(cfg, state, length)      # prefiller side
+    nbytes  = payload_bytes(payload)           # what would cross the wire
+    state   = insert(cfg, pool_state, payload, slot)   # decoder side
+
+``extract`` trims the cache to the request's actual length (the only part
+worth shipping) and keeps O(1) recurrent states whole — this is why
+attention-free architectures have near-infinite network velocity (§III-C /
+DESIGN.md): ``payload_bytes`` for RWKV is KBs where Llama's is MBs/request.
+
+The transfer ledger (`TransferStats`) is the measured source for the
+network-stage Token Velocity the Offline Profiler reports.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+from repro.serving.engine import _read_slot, _state_batch_axis
+
+
+@dataclass
+class KVPayload:
+    """One request's transferable state (batch-1 tree, length-trimmed)."""
+    tree: dict
+    length: int
+    seq_axes: dict          # path-str -> axis that was trimmed (re-pad info)
+
+
+_SEQ_LEAVES = ("k", "v", "k_scale", "v_scale", "c_kv", "k_rope")
+
+
+def _leaf_key(path) -> str:
+    return path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+
+
+def extract(cfg: ModelConfig, state, length: int, slot: int = 0) -> KVPayload:
+    """Pull slot `slot` out of a pooled state and trim cache leaves to
+    `length` tokens (round up to 128 for TPU-aligned transfers)."""
+    one = _read_slot(state, slot)
+    pad_len = min(max(int(math.ceil(length / 128.0)) * 128, 8), 1 << 30)
+    seq_axes = {}
+
+    def trim(path, leaf):
+        key = _leaf_key(path)
+        if key in _SEQ_LEAVES:
+            ax = _state_batch_axis(path) + 1     # seq is right after batch
+            n = min(pad_len, leaf.shape[ax])
+            seq_axes[jax.tree_util.keystr(path)] = ax
+            return jax.lax.slice_in_dim(leaf, 0, n, axis=ax)
+        return leaf
+
+    return KVPayload(
+        tree=jax.tree_util.tree_map_with_path(trim, one),
+        length=length, seq_axes=seq_axes)
+
+
+def insert(cfg: ModelConfig, pool_state, payload: KVPayload, slot: int):
+    """Write a payload into slot `slot` of a decoder's pooled state."""
+    def put(path, pool_leaf, one_leaf):
+        ax = _state_batch_axis(path)
+        key = jax.tree_util.keystr(path)
+        if key in payload.seq_axes:
+            sax = payload.seq_axes[key]
+            pad = pool_leaf.shape[sax] - one_leaf.shape[sax]
+            if pad > 0:
+                widths = [(0, 0)] * one_leaf.ndim
+                widths[sax] = (0, pad)
+                one_leaf = jnp.pad(one_leaf, widths)
+        return jax.lax.dynamic_update_slice_in_dim(
+            pool_leaf, one_leaf.astype(pool_leaf.dtype), slot, axis=ax)
+
+    return jax.tree_util.tree_map_with_path(put, pool_state, payload.tree)
+
+
+def payload_bytes(payload: KVPayload) -> int:
+    return int(sum(np.prod(x.shape) * x.dtype.itemsize
+                   for x in jax.tree.leaves(payload.tree)))
+
+
+@dataclass
+class TransferStats:
+    """Ledger of prefiller->decoder transfers (drives measured V_N)."""
+    n_transfers: int = 0
+    total_bytes: int = 0
+    total_tokens: int = 0
+    total_wall_s: float = 0.0
+
+    def record(self, nbytes: int, tokens: int, wall_s: float):
+        self.n_transfers += 1
+        self.total_bytes += nbytes
+        self.total_tokens += tokens
+        self.total_wall_s += wall_s
+
+    def bytes_per_token(self) -> float:
+        return self.total_bytes / max(self.total_tokens, 1)
+
+    def measured_network_velocity(self, link_bw: float) -> float:
+        """tok/s the link could sustain at the observed bytes/token."""
+        return link_bw / max(self.bytes_per_token(), 1e-9)
+
+
+def transfer(cfg: ModelConfig, src_state, dst_state, length: int,
+             src_slot: int, dst_slot: int,
+             stats: TransferStats | None = None):
+    """extract -> (wire) -> insert, with ledger accounting."""
+    t0 = time.perf_counter()
+    payload = extract(cfg, src_state, length, src_slot)
+    nbytes = payload_bytes(payload)
+    new_dst = insert(cfg, dst_state, payload, dst_slot)
+    if stats is not None:
+        stats.record(nbytes, length, time.perf_counter() - t0)
+    return new_dst

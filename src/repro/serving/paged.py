@@ -1,0 +1,139 @@
+"""Paged KV cache: vLLM's block-table idea adapted to TPU.
+
+The default Engine preallocates a contiguous per-slot cache (XLA-static,
+simple).  Production memory efficiency wants vLLM-style paging: a global
+pool of fixed-size blocks, per-request block tables, allocation on demand —
+no fragmentation between short and long requests.  TPU adaptation: the
+block size is 128 tokens (lane-width aligned, so one block = one MXU-shaped
+tile per head) instead of vLLM's 16.
+
+Components:
+  * ``BlockAllocator``  — free-list allocation with explicit OOM signaling
+    (backpressure: this is exactly the memory-release dynamic TokenScale's
+    decode velocity V_D measures);
+  * ``PagedKV``         — (layers-stacked) pooled K/V + block tables;
+  * ``paged_decode_attention_ref`` — pure-jnp oracle (gather + masked
+    attention over the request's pages);
+  * the Pallas kernel lives in ``kernels/paged_decode_attention.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+BLOCK_SIZE = 128
+
+
+class OutOfBlocks(Exception):
+    """Allocation failure == decoder backpressure (§III-B)."""
+
+
+@dataclass
+class BlockAllocator:
+    num_blocks: int
+    _free: list = field(default_factory=list)
+    _owner: dict = field(default_factory=dict)     # block -> rid
+
+    def __post_init__(self):
+        self._free = list(range(self.num_blocks - 1, -1, -1))
+
+    def alloc(self, rid: int) -> int:
+        if not self._free:
+            raise OutOfBlocks(f"no free blocks for request {rid}")
+        b = self._free.pop()
+        self._owner[b] = rid
+        return b
+
+    def free_request(self, rid: int) -> int:
+        blocks = [b for b, r in self._owner.items() if r == rid]
+        for b in blocks:
+            del self._owner[b]
+            self._free.append(b)
+        return len(blocks)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def utilization(self) -> float:
+        return 1.0 - self.n_free / max(self.num_blocks, 1)
+
+
+class PagedKV:
+    """One layer-stacked paged pool + per-slot block tables.
+
+    pool_k/pool_v : (L, num_blocks, BLOCK_SIZE, Hkv, Dh)
+    tables        : (num_slots, max_blocks) int32, -1 = unallocated
+    lens          : (num_slots,) tokens currently cached per slot
+    """
+
+    def __init__(self, num_layers: int, num_blocks: int, num_slots: int,
+                 max_blocks_per_slot: int, n_kv_heads: int, head_dim: int,
+                 dtype=jnp.bfloat16):
+        self.block_size = BLOCK_SIZE
+        self.alloc = BlockAllocator(num_blocks)
+        self.pool_k = jnp.zeros(
+            (num_layers, num_blocks, BLOCK_SIZE, n_kv_heads, head_dim),
+            dtype)
+        self.pool_v = jnp.zeros_like(self.pool_k)
+        self.tables = np.full((num_slots, max_blocks_per_slot), -1,
+                              np.int32)
+        self.lens = np.zeros((num_slots,), np.int32)
+
+    def ensure_capacity(self, slot: int, rid: int, n_tokens: int):
+        """Allocate blocks so slot can hold `n_tokens`; raises OutOfBlocks."""
+        need = -(-n_tokens // self.block_size)
+        have = int((self.tables[slot] >= 0).sum())
+        for i in range(have, need):
+            self.tables[slot, i] = self.alloc.alloc(rid)
+
+    def write_tokens(self, slot: int, layer_k, layer_v, start: int):
+        """Write (L, n, Hkv, Dh) new tokens at position `start`."""
+        n = layer_k.shape[1]
+        for off in range(n):
+            pos = start + off
+            blk = int(self.tables[slot, pos // self.block_size])
+            assert blk >= 0, "write into unallocated block"
+            i = pos % self.block_size
+            self.pool_k = self.pool_k.at[:, blk, i].set(
+                layer_k[:, off].astype(self.pool_k.dtype))
+            self.pool_v = self.pool_v.at[:, blk, i].set(
+                layer_v[:, off].astype(self.pool_v.dtype))
+        self.lens[slot] = max(self.lens[slot], start + n)
+
+    def release(self, slot: int, rid: int):
+        self.alloc.free_request(rid)
+        self.tables[slot] = -1
+        self.lens[slot] = 0
+
+
+def paged_decode_attention_ref(q, pool_k, pool_v, table, cur_len,
+                               scale: Optional[float] = None):
+    """Oracle: single-layer paged decode attention for ONE request.
+
+    q: (Hq, D); pool_k/v: (num_blocks, BS, Hkv, D); table: (max_blocks,)
+    int32 (-1 = unallocated); attend to positions 0..cur_len (inclusive —
+    the current token's KV is already written)."""
+    BS = pool_k.shape[1]
+    Hq, D = q.shape
+    Hkv = pool_k.shape[2]
+    G = Hq // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    safe = jnp.maximum(table, 0)
+    k = pool_k[safe]                       # (max_blocks, BS, Hkv, D)
+    v = pool_v[safe]
+    MB = table.shape[0]
+    k = k.reshape(MB * BS, Hkv, D)
+    v = v.reshape(MB * BS, Hkv, D)
+    pos = jnp.arange(MB * BS)
+    valid = (pos <= cur_len) & (jnp.repeat(table, BS) >= 0)
+    qg = q.reshape(Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("kgd,lkd->kgl", qg, k.astype(jnp.float32)) * scale
+    s = jnp.where(valid[None, None], s, -2.0 ** 30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("kgl,lkd->kgd", p, v.astype(jnp.float32))
+    return o.reshape(Hq, D).astype(q.dtype)

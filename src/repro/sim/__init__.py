@@ -1,0 +1,6 @@
+from repro.sim.cluster import Cluster, SimReport, SimRequest  # noqa: F401
+from repro.sim.traces import (  # noqa: F401
+    TRACES, TraceRequest, TraceSpec, generate, generate_mixed, get_trace,
+    step_trace,
+)
+from repro.sim.runner import run_policy, compare_policies  # noqa: F401

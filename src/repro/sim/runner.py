@@ -1,0 +1,83 @@
+"""Experiment runner: build (cluster, policy) pairs the way §V configures
+them and produce the paper's comparison numbers."""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.configs import get_config
+from repro.core import (AIBrixPolicy, BlitzScalePolicy, DistServePolicy,
+                        InstanceSpec, OutputPredictor, TokenScalePolicy,
+                        plan_convertible, profile)
+from repro.core.hardware import CHIPS
+from repro.core.velocity import VelocityProfile
+from repro.sim.cluster import Cluster, SimReport
+from repro.sim.traces import get_trace
+
+
+def make_policy(name: str, prof: VelocityProfile, n_convertible: int = 1,
+                mean_in: float = 1024.0, mean_out: float = 240.0):
+    """§V Baselines.  Threshold derivations follow Table I's recipes:
+    request-based thresholds = stage capacity / mean request size, with the
+    safety factors the respective papers use (which is exactly why they
+    overprovision after bursts, §VI-A)."""
+    if name == "tokenscale":
+        return TokenScalePolicy(prof, convertible=n_convertible)
+    if name == "distserve":
+        # "uses a simulator to determine scaling thresholds" — capacity/size
+        # with a 0.7 safety factor
+        return DistServePolicy(
+            rps_per_prefiller=max(0.7 * prof.v_prefill / mean_in, 0.5),
+            rps_per_decoder=max(
+                0.5 * prof.v_decode_mean() / (mean_in + mean_out), 0.5))
+    if name == "aibrix":
+        # Table I: concurrency threshold = max prefill throughput / average
+        # prefill length (in requests); decoder fixed at 70% memory util
+        return AIBrixPolicy(
+            conc_per_prefiller=max(prof.v_prefill / mean_in * 0.5, 1.0),
+            mem_util_target=0.7)
+    if name == "blitzscale":
+        # Table I: prefiller = avg prefill length / max prefill throughput;
+        # decoder = available KVC memory / per-request footprint
+        return BlitzScalePolicy(
+            req_per_prefiller=max(prof.v_prefill / mean_in * 0.5, 1.0),
+            req_per_decoder=max(prof.max_batch.get("M-M", 45) * 0.6, 4.0))
+    raise ValueError(name)
+
+
+def run_policy(policy_name: str, trace_name: str = "mixed",
+               model: str = "llama31_8b", chip: str = "a100", tp: int = 1,
+               duration: float = 120.0, rps: float = 8.0, seed: int = 0,
+               n_convertible: int = 1, predictor_accuracy: float = 0.85,
+               dt: float = 0.025,
+               prof: Optional[VelocityProfile] = None) -> SimReport:
+    cfg = get_config(model)
+    inst = InstanceSpec(CHIPS[chip], tp=tp)
+    prof = prof or profile(cfg, inst)
+    trace = get_trace(trace_name, duration, rps, seed)
+    mean_in = (sum(r.in_len for r in trace) / max(len(trace), 1)) or 1024.0
+    mean_out = (sum(r.out_len for r in trace) / max(len(trace), 1)) or 240.0
+    policy = make_policy(policy_name, prof, n_convertible, mean_in, mean_out)
+    conv_cfg = plan_convertible(
+        cfg, inst, expected_decode_batch=max(
+            prof.max_batch.get("M-M", 16) // 2, 1),
+        avg_ctx=1200.0, burst_ratio=0.2, max_decoders=8)
+    n_conv = n_convertible if policy_name == "tokenscale" else 0
+    cl = Cluster(cfg, inst, prof, policy,
+                 predictor=OutputPredictor(predictor_accuracy, seed),
+                 conv_cfg=conv_cfg, n_convertible=n_conv, dt=dt)
+    rep = cl.run(trace, duration + 30.0)
+    return rep
+
+
+def compare_policies(trace_name: str = "mixed", model: str = "llama31_8b",
+                     chip: str = "a100", tp: int = 1,
+                     duration: float = 120.0, rps: float = 8.0,
+                     seed: int = 0) -> dict[str, SimReport]:
+    cfg = get_config(model)
+    inst = InstanceSpec(CHIPS[chip], tp=tp)
+    prof = profile(cfg, inst)
+    out = {}
+    for name in ["tokenscale", "distserve", "aibrix", "blitzscale"]:
+        out[name] = run_policy(name, trace_name, model, chip, tp,
+                               duration, rps, seed, prof=prof)
+    return out

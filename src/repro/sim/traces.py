@@ -1,0 +1,158 @@
+"""Synthetic production-like traces (§V Workload Generation).
+
+The paper replays Azure LLM inference traces [35] and BurstGPT [38].  Those
+datasets are not available offline, so we generate traces with the published
+summary statistics:
+
+  * burstiness: the system is in a burst ~47% of operational time, mean
+    burst duration 2.3 s (§I) — modeled as an ON/OFF modulated Poisson
+    process (OFF ~ Exp(2.6 s), ON ~ Exp(2.3 s), ON rate multiplier 2-6x);
+  * Azure *Conversation*: medium prompts / medium outputs;
+  * Azure *Code*: long prompts / short outputs;
+  * BurstGPT 1/2: shorter prompts, heavier burst multipliers;
+  * *Mixed*: equal-rate mixture (the paper's third workload).
+
+Lengths are lognormal, clipped to the Table II bucket range [32, 8192] /
+[16, 640].  Everything is deterministic in the seed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterator
+
+import numpy as np
+
+
+@dataclass
+class TraceRequest:
+    rid: int
+    t: float
+    in_len: int
+    out_len: int
+
+
+@dataclass(frozen=True)
+class TraceSpec:
+    name: str
+    in_mean: float            # lognormal mean of prompt tokens
+    in_sigma: float
+    out_mean: float
+    out_sigma: float
+    burst_mult_lo: float = 2.0
+    burst_mult_hi: float = 6.0
+    burst_on_mean: float = 2.3     # §I: mean burst duration
+    burst_off_mean: float = 2.6    # -> ~47% of time bursting
+
+
+TRACES: dict[str, TraceSpec] = {
+    "azure_conv": TraceSpec("azure_conv", in_mean=1024, in_sigma=0.9,
+                            out_mean=240, out_sigma=0.7),
+    "azure_code": TraceSpec("azure_code", in_mean=2048, in_sigma=0.8,
+                            out_mean=80, out_sigma=0.6,
+                            burst_mult_lo=2.0, burst_mult_hi=4.0),
+    "burstgpt1": TraceSpec("burstgpt1", in_mean=512, in_sigma=1.0,
+                           out_mean=300, out_sigma=0.8,
+                           burst_mult_lo=3.0, burst_mult_hi=8.0),
+    "burstgpt2": TraceSpec("burstgpt2", in_mean=640, in_sigma=1.1,
+                           out_mean=350, out_sigma=0.9,
+                           burst_mult_lo=4.0, burst_mult_hi=10.0),
+}
+
+
+def _lognormal(rng, mean, sigma, lo, hi, size):
+    mu = np.log(mean) - sigma ** 2 / 2.0
+    return np.clip(rng.lognormal(mu, sigma, size), lo, hi).astype(int)
+
+
+def generate(spec: TraceSpec, duration_s: float, rps: float,
+             seed: int = 0) -> list[TraceRequest]:
+    """ON/OFF modulated Poisson arrivals with lognormal lengths."""
+    rng = np.random.RandomState(seed)
+    # build the burst timeline
+    t, phases = 0.0, []                   # (start, end, multiplier)
+    while t < duration_s:
+        off = rng.exponential(spec.burst_off_mean)
+        on = rng.exponential(spec.burst_on_mean)
+        mult = rng.uniform(spec.burst_mult_lo, spec.burst_mult_hi)
+        phases.append((t, t + off, 1.0))
+        phases.append((t + off, t + off + on, mult))
+        t += off + on
+    # thinning: draw at the max rate, accept by local multiplier
+    max_mult = spec.burst_mult_hi
+    base = rps / (1.0 + 0.47 * (spec.burst_mult_lo + spec.burst_mult_hi) / 2.0
+                  - 0.47)  # normalize so the long-run average ~= rps
+    base = max(base, 0.1)
+    lam = base * max_mult
+    n_candidates = rng.poisson(lam * duration_s)
+    times = np.sort(rng.uniform(0, duration_s, n_candidates))
+    mults = np.ones_like(times)
+    for (s, e, m) in phases:
+        mults[(times >= s) & (times < e)] = m
+    accept = rng.uniform(0, max_mult, len(times)) < mults
+    times = times[accept]
+    n = len(times)
+    ins = _lognormal(rng, spec.in_mean, spec.in_sigma, 32, 8192, n)
+    outs = _lognormal(rng, spec.out_mean, spec.out_sigma, 16, 640, n)
+    return [TraceRequest(i, float(times[i]), int(ins[i]), int(outs[i]))
+            for i in range(n)]
+
+
+def generate_mixed(duration_s: float, rps: float,
+                   seed: int = 0) -> list[TraceRequest]:
+    """The paper's Mixed trace: conv + code + BurstGPT 1/2 at equal rates."""
+    parts = []
+    for i, name in enumerate(["azure_conv", "azure_code",
+                              "burstgpt1", "burstgpt2"]):
+        parts += generate(TRACES[name], duration_s, rps / 4.0, seed + i)
+    parts.sort(key=lambda r: r.t)
+    for i, r in enumerate(parts):
+        r.rid = i
+    return parts
+
+
+def get_trace(name: str, duration_s: float = 120.0, rps: float = 8.0,
+              seed: int = 0) -> list[TraceRequest]:
+    if name == "mixed":
+        return generate_mixed(duration_s, rps, seed)
+    return generate(TRACES[name], duration_s, rps, seed)
+
+
+def varying_rate_trace(segments: list[tuple[float, float]],
+                       spec: TraceSpec = TRACES["azure_conv"],
+                       seed: int = 0) -> list[TraceRequest]:
+    """Piecewise-rate workload (large-scale load swings; used by the
+    provisioned-vs-required correlation study, Fig. 11)."""
+    out: list[TraceRequest] = []
+    t0 = 0.0
+    for i, (dur, rps) in enumerate(segments):
+        part = generate(spec, dur, rps, seed + 7 * i)
+        for r in part:
+            r.t += t0
+        out += part
+        t0 += dur
+    out.sort(key=lambda r: r.t)
+    for i, r in enumerate(out):
+        r.rid = i
+    return out
+
+
+def step_trace(duration_s: float, base_rps: float, burst_rps: float,
+               burst_start: float, burst_len: float,
+               spec: TraceSpec = TRACES["azure_conv"],
+               seed: int = 0) -> list[TraceRequest]:
+    """Deterministic-rate step trace (Fig. 10: 1 -> 10 RPS at t=10 s)."""
+    rng = np.random.RandomState(seed)
+    reqs, t, rid = [], 0.0, 0
+    while t < duration_s:
+        rate = burst_rps if burst_start <= t < burst_start + burst_len \
+            else base_rps
+        t += rng.exponential(1.0 / rate)
+        if t >= duration_s:
+            break
+        in_len = int(_lognormal(rng, spec.in_mean, spec.in_sigma,
+                                32, 8192, 1)[0])
+        out_len = int(_lognormal(rng, spec.out_mean, spec.out_sigma,
+                                 16, 640, 1)[0])
+        reqs.append(TraceRequest(rid, t, in_len, out_len))
+        rid += 1
+    return reqs

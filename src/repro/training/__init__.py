@@ -1,0 +1,8 @@
+from repro.training.checkpoint import restore, save  # noqa: F401
+from repro.training.data import DataConfig, PackedDataset  # noqa: F401
+from repro.training.optimizer import (  # noqa: F401
+    AdamWConfig, AdamWState, adamw_init, adamw_update, global_norm, lr_at,
+)
+from repro.training.train_loop import (  # noqa: F401
+    TrainResult, lm_loss, make_train_step, train,
+)

@@ -1,0 +1,80 @@
+"""Sharded .npz checkpointing for arbitrary pytrees (no orbax offline).
+
+Leaves are flattened to path-keyed arrays; large trees are split across
+multiple .npz shards so no single file exceeds `shard_bytes`.  Restore
+rebuilds the pytree onto host memory (device placement is the caller's
+job — launch/train.py re-device_puts with the mesh shardings).
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+
+    def rec(prefix, t):
+        if isinstance(t, dict):
+            for k in sorted(t):
+                rec(f"{prefix}/{k}" if prefix else k, t[k])
+        elif isinstance(t, (list, tuple)):
+            for i, x in enumerate(t):
+                rec(f"{prefix}/{i}", x)
+        else:
+            flat[prefix] = np.asarray(t)
+    rec("", tree)
+    return flat
+
+
+def save(path: str, tree: Any, step: int = 0,
+         shard_bytes: int = 1 << 30) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    shards: list[dict[str, np.ndarray]] = [{}]
+    sizes = [0]
+    for k, v in flat.items():
+        if sizes[-1] + v.nbytes > shard_bytes and shards[-1]:
+            shards.append({})
+            sizes.append(0)
+        shards[-1][k] = v
+        sizes[-1] += v.nbytes
+    index = {"step": step, "n_shards": len(shards),
+             "keys": {k: i for i, sh in enumerate(shards) for k in sh}}
+    for i, sh in enumerate(shards):
+        np.savez(os.path.join(path, f"shard_{i:04d}.npz"), **sh)
+    with open(os.path.join(path, "index.json"), "w") as f:
+        json.dump(index, f)
+
+
+def restore(path: str, like: Any = None) -> tuple[Any, int]:
+    """Returns (tree, step). With `like`, re-nests into its structure and
+    casts to its dtypes; otherwise returns the flat {path: array} dict."""
+    with open(os.path.join(path, "index.json")) as f:
+        index = json.load(f)
+    flat: dict[str, np.ndarray] = {}
+    for i in range(index["n_shards"]):
+        with np.load(os.path.join(path, f"shard_{i:04d}.npz")) as z:
+            flat.update({k: z[k] for k in z.files})
+    if like is None:
+        return flat, index["step"]
+
+    paths_like = _flatten(like)
+    assert set(paths_like) == set(flat), (
+        "checkpoint/param structure mismatch: "
+        f"{set(paths_like) ^ set(flat)}")
+
+    def rebuild(prefix, t):
+        if isinstance(t, dict):
+            return {k: rebuild(f"{prefix}/{k}" if prefix else k, v)
+                    for k, v in t.items()}
+        if isinstance(t, (list, tuple)):
+            out = [rebuild(f"{prefix}/{i}", x) for i, x in enumerate(t)]
+            return type(t)(out)
+        return flat[prefix].astype(np.asarray(t).dtype)
+
+    return rebuild("", like), index["step"]

@@ -1,0 +1,120 @@
+"""Pure-JAX AdamW + LR schedules (no optax in this environment).
+
+Optimizer state mirrors the parameter pytree (so it inherits parameter
+sharding under pjit: m/v shard exactly like their weights — the ZeRO-ish
+"optimizer state sharded with params" layout for free).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    # memory options for frontier-scale models (see DESIGN.md):
+    moment_dtype: str = "float32"   # "bfloat16" halves m/v residency
+    factored: bool = False          # adafactor-style factored 2nd moment
+                                    # (row/col means for >=2D leaves)
+
+
+def lr_at(cfg: AdamWConfig, step) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_ratio."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    prog = jnp.clip(prog, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def adamw_init(params, cfg: AdamWConfig = AdamWConfig()) -> AdamWState:
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def zeros_m(x):
+        return jnp.zeros(x.shape, mdt)
+
+    def zeros_v(x):
+        if cfg.factored and x.ndim >= 2:
+            # factored second moment: row means + col means over the last
+            # two dims (leading stacking dims kept whole)
+            return (jnp.zeros(x.shape[:-1], mdt),
+                    jnp.zeros(x.shape[:-2] + x.shape[-1:], mdt))
+        return jnp.zeros(x.shape, mdt)
+
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros_m, params),
+                      v=jax.tree.map(zeros_v, params))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: AdamWState, params):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip else jnp.ones(())
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = (cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g)
+        if isinstance(v, tuple):   # factored second moment
+            vr, vc = v
+            g2 = g * g
+            vr = cfg.b2 * vr.astype(jnp.float32) \
+                + (1 - cfg.b2) * g2.mean(axis=-1)
+            vc = cfg.b2 * vc.astype(jnp.float32) \
+                + (1 - cfg.b2) * g2.mean(axis=-2)
+            vh = (vr[..., None] * vc[..., None, :]
+                  / jnp.maximum(vr.mean(-1)[..., None, None], 1e-30)) / bc2
+            new_v = (vr.astype(mdt), vc.astype(mdt))
+        else:
+            vf = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+            vh = vf / bc2
+            new_v = vf.astype(mdt)
+        mh = m / bc1
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay \
+            * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype),
+                m.astype(mdt), new_v)
+
+    is_v_leaf = lambda x: isinstance(x, tuple)  # noqa: E731
+    flat = jax.tree.map(upd, params, grads, state.m, state.v,
+                        is_leaf=lambda x: False)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(step, new_m, new_v), {
+        "grad_norm": gnorm, "lr": lr}

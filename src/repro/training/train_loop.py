@@ -1,0 +1,78 @@
+"""pjit train step + host loop.
+
+``make_train_step`` builds the jitted (params, opt, batch) -> (params, opt,
+metrics) function used by both the CPU examples (tiny models) and the
+multi-pod dry-run (full configs, abstract lowering).  Loss = causal LM
+cross-entropy + MoE router aux.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import forward_train, init_params
+from repro.training.optimizer import (AdamWConfig, AdamWState, adamw_init,
+                                      adamw_update)
+
+
+def lm_loss(cfg: ModelConfig, params, tokens, labels,
+            image_embeds=None, remat: bool = False) -> tuple[jax.Array, dict]:
+    logits, aux = forward_train(cfg, params, tokens,
+                                image_embeds=image_embeds, remat=remat)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None].astype(jnp.int32),
+                             axis=-1)[..., 0]
+    ce = -ll.mean()
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    donate: bool = True, remat: bool = False) -> Callable:
+    def step(params, opt: AdamWState, tokens, labels, image_embeds=None):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, tokens, labels, image_embeds,
+                              remat=remat),
+            has_aux=True)(params)
+        params, opt, om = adamw_update(opt_cfg, grads, opt, params)
+        metrics = {"loss": loss, **parts, **om}
+        return params, opt, metrics
+
+    return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+
+@dataclass
+class TrainResult:
+    losses: list
+    steps: int
+    wall_s: float
+
+
+def train(cfg: ModelConfig, *, steps: int, batch: int, seq_len: int,
+          opt_cfg: Optional[AdamWConfig] = None, seed: int = 0,
+          log_every: int = 10, params=None,
+          log_fn=print) -> tuple[dict, TrainResult]:
+    """Single-host training loop over the synthetic packed dataset."""
+    from repro.training.data import DataConfig, PackedDataset
+    opt_cfg = opt_cfg or AdamWConfig(total_steps=steps,
+                                     warmup_steps=max(steps // 20, 5))
+    params = params if params is not None else init_params(
+        cfg, jax.random.PRNGKey(seed))
+    opt = adamw_init(params, opt_cfg)
+    ds = PackedDataset(DataConfig(cfg.vocab_size, seq_len, batch, seed))
+    step_fn = make_train_step(cfg, opt_cfg)
+    losses = []
+    t0 = time.time()
+    for i in range(steps):
+        tokens, labels = ds.batch(i)
+        params, opt, m = step_fn(params, opt, jnp.asarray(tokens),
+                                 jnp.asarray(labels))
+        losses.append(float(m["loss"]))
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            log_fn(f"step {i:5d} loss={losses[-1]:.4f} "
+                   f"lr={float(m['lr']):.2e} gnorm={float(m['grad_norm']):.3f}")
+    return params, TrainResult(losses, steps, time.time() - t0)

@@ -1,0 +1,164 @@
+"""Autoscaler policies (Eq.2-4 + baselines) and the Fig. 6 scenario."""
+import pytest
+
+from repro.configs import get_config
+from repro.core import (AIBrixPolicy, BlitzScalePolicy, CHIPS,
+                        DistServePolicy, InstanceSpec, Observation,
+                        TokenScalePolicy, profile)
+from repro.core.router import BurstDetector, Router, ttft_slo
+
+
+@pytest.fixture(scope="module")
+def prof():
+    return profile(get_config("llama31_8b"), InstanceSpec(CHIPS["a100"], 1))
+
+
+def _obs(t=10.0, tok=0.0, buckets=None, rps=0.0, queue=0, inflight=0,
+         util=0.0, p=1, d=1):
+    return Observation(t=t, token_rate_in=tok,
+                       token_rate_by_bucket=buckets or {}, rps=rps,
+                       prefill_queue=queue, decode_inflight=inflight,
+                       mem_util=util, cur_prefillers=p, cur_decoders=d)
+
+
+def test_eq2_prefiller_count(prof):
+    pol = TokenScalePolicy(prof, convertible=1)
+    v = min(prof.v_prefill, prof.v_network)
+    dec = pol.decide(_obs(tok=v * 2.5))
+    assert dec.prefillers == 3          # ceil(2.5)
+
+
+def test_eq3_eq4_decoder_count(prof):
+    pol = TokenScalePolicy(prof, convertible=1)
+    lam = {"M-M": prof.v_decode["M-M"] * 1.4,
+           "S-L": prof.v_decode["S-L"] * 0.9}
+    dec = pol.decide(_obs(buckets=lam))
+    # Eq.3: ceil(1.4 + 0.9) = 3; Eq.4: minus 1 convertible
+    assert dec.decoders == 3 - 1
+
+
+def test_fig6_token_burst_detected_only_by_tokenscale(prof):
+    """Fig. 6 T2: few requests, many tokens. Request-threshold policies
+    under-provision; the velocity policy scales."""
+    ts = TokenScalePolicy(prof, convertible=0)
+    ds = DistServePolicy(rps_per_prefiller=4.0, rps_per_decoder=8.0)
+    # 2 requests/s but each with huge prompts: token rate = 3x V_P
+    obs = _obs(tok=prof.v_prefill * 3.0, rps=2.0)
+    assert ts.decide(obs).prefillers == 3
+    assert ds.decide(obs).prefillers == 1      # blind to token volume
+
+
+def test_fig6_request_burst_both_detect(prof):
+    ts = TokenScalePolicy(prof, convertible=0)
+    ds = DistServePolicy(rps_per_prefiller=4.0, rps_per_decoder=8.0)
+    # many tiny requests: 12 rps of ~0.1*V_P total tokens
+    obs = _obs(tok=prof.v_prefill * 1.2, rps=12.0)
+    assert ts.decide(obs).prefillers == 2
+    assert ds.decide(obs).prefillers == 3
+
+
+def test_scale_down_hysteresis(prof):
+    pol = TokenScalePolicy(prof, convertible=0, down_delay=5.0)
+    hi = _obs(t=0.0, tok=prof.v_prefill * 3.0, p=3)
+    assert pol.decide(hi).prefillers == 3
+    lo1 = _obs(t=1.0, tok=prof.v_prefill * 0.5, p=3)
+    assert pol.decide(lo1).prefillers == 3     # held
+    lo2 = _obs(t=7.0, tok=prof.v_prefill * 0.5, p=3)
+    assert pol.decide(lo2).prefillers == 1     # released after delay
+
+
+def test_aibrix_lags_burst(prof):
+    """AIBrix averages over a sliding window — a 1-tick spike must not
+    trigger full scaling immediately (the §II-D lag)."""
+    pol = AIBrixPolicy(conc_per_prefiller=2.0, window_s=5.0)
+    for t in range(5):
+        pol.decide(_obs(t=float(t), queue=0))
+    spike = pol.decide(_obs(t=5.0, queue=20))
+    assert spike.prefillers < 10    # 20/2 = 10 would be the instant answer
+
+
+def test_blitzscale_is_live(prof):
+    pol = BlitzScalePolicy()
+    assert pol.decide(_obs(queue=30, inflight=50)).live
+
+
+# ---------------------------------------------------------------------------
+# Router (Alg. 1) + burst detector
+# ---------------------------------------------------------------------------
+
+class _FakeInst:
+    def __init__(self, tokens, v):
+        self._t, self._v = tokens, v
+
+    def inflight_tokens(self):
+        return self._t
+
+    def prefill_velocity(self):
+        return self._v
+
+
+def test_alg1_first_feasible_prefiller():
+    r = Router()
+    fast = _FakeInst(tokens=100, v=10_000)
+    slow = _FakeInst(tokens=100_000, v=10_000)
+    tgt, kind = r.route_prefill(100, [slow, fast], [], now=0.0)
+    assert tgt is fast and kind == "prefiller"
+
+
+def test_alg1_falls_through_to_convertible():
+    r = Router()
+    slow = _FakeInst(tokens=100_000, v=10_000)     # 10 s wait >> SLO
+    conv = _FakeInst(tokens=0, v=5_000)
+    tgt, kind = r.route_prefill(100, [slow], [conv], now=0.0)
+    assert tgt is conv and kind == "convertible"
+
+
+def test_alg1_queues_when_nothing_feasible():
+    r = Router()
+    slow = _FakeInst(tokens=100_000, v=10_000)
+    tgt, kind = r.route_prefill(100, [slow], [slow], now=0.0)
+    assert tgt is None and kind is None
+
+
+def test_ttft_slo_tiers():
+    assert ttft_slo(100) == 0.25
+    assert ttft_slo(512) == 0.40
+    assert ttft_slo(8000) == 2.0
+
+
+def test_burst_detector():
+    bd = BurstDetector(short_s=1.0, long_s=60.0, factor=1.5)
+    for t in range(30):
+        bd.observe(float(t), 100.0)
+    assert not bd.is_burst(30.0)
+    bd.observe(30.1, 3000.0)    # spike
+    assert bd.is_burst(30.2)
+
+
+class _FakeDecoder:
+    is_convertible = False
+
+    def __init__(self, inflight_by_bucket, util=0.1, conv=False):
+        self._b = inflight_by_bucket
+        self._u = util
+        self.is_convertible = conv
+
+    def inflight_of_bucket(self, b):
+        return self._b.get(b, 0)
+
+    def mem_util(self):
+        return self._u
+
+
+def test_decode_routing_by_bucket():
+    r = Router()
+    d1 = _FakeDecoder({"M-M": 5})
+    d2 = _FakeDecoder({"M-M": 1})
+    assert r.route_decode("M-M", [d1, d2]) is d2
+
+
+def test_decode_routing_excludes_full_convertible():
+    r = Router()
+    conv = _FakeDecoder({"M-M": 0}, util=0.95, conv=True)
+    reg = _FakeDecoder({"M-M": 9}, util=0.5)
+    assert r.route_decode("M-M", [conv, reg], mem_threshold=0.9) is reg

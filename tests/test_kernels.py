@@ -1,0 +1,188 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.ops import (decode_attention_op, prefill_attention,
+                               wkv6_op)
+
+RNG = np.random.RandomState(42)
+
+
+def _rnd(*shape, dtype=np.float32):
+    return jnp.asarray(RNG.randn(*shape).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill attention
+# ---------------------------------------------------------------------------
+
+SWEEP = [
+    # B, Sq, Skv, Hq, Hkv, D, window, softcap
+    (1, 8, 8, 1, 1, 16, 0, 0.0),
+    (2, 24, 40, 4, 2, 64, 0, 0.0),
+    (2, 24, 40, 4, 2, 64, 16, 0.0),
+    (2, 24, 40, 4, 2, 64, 0, 30.0),
+    (1, 128, 128, 8, 8, 32, 0, 0.0),     # MHA
+    (3, 17, 33, 6, 1, 64, 0, 0.0),       # MQA, ragged sizes
+    (1, 256, 384, 2, 2, 128, 64, 50.0),  # gemma2-style local+softcap
+]
+
+
+@pytest.mark.parametrize("B,Sq,Skv,Hq,Hkv,D,window,cap", SWEEP)
+def test_chunked_prefill_attention(B, Sq, Skv, Hq, Hkv, D, window, cap):
+    q = _rnd(B, Sq, Hq, D)
+    k = _rnd(B, Skv, Hkv, D)
+    v = _rnd(B, Skv, Hkv, D)
+    off = jnp.asarray(RNG.randint(0, Skv - Sq + 1, size=(B,)), jnp.int32)
+    lens = jnp.asarray(RNG.randint(1, Skv + 1, size=(B,)), jnp.int32)
+    out = prefill_attention(q, k, v, off, lens, window=window, softcap=cap)
+    want = ref.chunked_prefill_attention_ref(q, k, v, off, lens,
+                                             window=window, softcap=cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_chunked_prefill_attention_bf16():
+    B, Sq, Skv, Hq, Hkv, D = 2, 16, 32, 4, 2, 64
+    q = _rnd(B, Sq, Hq, D).astype(jnp.bfloat16)
+    k = _rnd(B, Skv, Hkv, D).astype(jnp.bfloat16)
+    v = _rnd(B, Skv, Hkv, D).astype(jnp.bfloat16)
+    off = jnp.zeros((B,), jnp.int32)
+    lens = jnp.full((B,), Skv, jnp.int32)
+    out = prefill_attention(q, k, v, off, lens)
+    want = ref.chunked_prefill_attention_ref(q, k, v, off, lens)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    sq=st.integers(1, 24),
+    extra=st.integers(0, 24),
+    hkv=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 2, 3]),
+    d=st.sampled_from([8, 32]),
+)
+def test_prefill_attention_property(b, sq, extra, hkv, g, d):
+    """Property: kernel == oracle for arbitrary (chunk, cache) geometry."""
+    rng = np.random.RandomState(b * 1000 + sq * 10 + extra)
+    skv = sq + extra
+    hq = hkv * g
+    q = jnp.asarray(rng.randn(b, sq, hq, d).astype(np.float32))
+    k = jnp.asarray(rng.randn(b, skv, hkv, d).astype(np.float32))
+    v = jnp.asarray(rng.randn(b, skv, hkv, d).astype(np.float32))
+    off = jnp.asarray(rng.randint(0, extra + 1, size=(b,)), jnp.int32)
+    lens = jnp.asarray(rng.randint(1, skv + 1, size=(b,)), jnp.int32)
+    out = prefill_attention(q, k, v, off, lens)
+    want = ref.chunked_prefill_attention_ref(q, k, v, off, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,L,Hq,Hkv,D,window", [
+    (1, 16, 1, 1, 16, 0),
+    (2, 64, 8, 2, 64, 0),
+    (2, 64, 8, 2, 64, 16),
+    (4, 129, 4, 1, 128, 0),     # non-multiple cache length
+    (1, 512, 16, 16, 64, 0),    # MHA long-ish
+])
+def test_decode_attention(B, L, Hq, Hkv, D, window):
+    q = _rnd(B, Hq, D)
+    k = _rnd(B, L, Hkv, D)
+    v = _rnd(B, L, Hkv, D)
+    cur = jnp.asarray(RNG.randint(0, L, size=(B,)), jnp.int32)
+    out = decode_attention_op(q, k, v, cur, window=window, block_k=32)
+    want = ref.decode_attention_ref(q, k, v, cur, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_block_skipping():
+    """Blocks beyond cur_len are skipped: result must not depend on garbage
+    in the dead region."""
+    B, L, H, D = 1, 64, 2, 32
+    q = _rnd(B, H, D)
+    k = _rnd(B, L, H, D)
+    v = _rnd(B, L, H, D)
+    cur = jnp.array([10], jnp.int32)
+    out1 = decode_attention_op(q, k, v, cur, block_k=16)
+    k2 = k.at[:, 20:].set(jnp.nan)
+    v2 = v.at[:, 20:].set(jnp.nan)
+    out2 = decode_attention_op(q, k2, v2, cur, block_k=16)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))
+
+
+# ---------------------------------------------------------------------------
+# wkv6
+# ---------------------------------------------------------------------------
+
+def _wkv_inputs(B, S, H, K, seed=0):
+    rng = np.random.RandomState(seed)
+    r = rng.randn(B, S, H, K).astype(np.float32)
+    k = rng.randn(B, S, H, K).astype(np.float32)
+    v = rng.randn(B, S, H, K).astype(np.float32)
+    w = np.exp(-np.exp(rng.randn(B, S, H, K).astype(np.float32) * 0.5 - 1))
+    u = rng.randn(H, K).astype(np.float32)
+    s0 = rng.randn(B, H, K, K).astype(np.float32)
+    return map(jnp.asarray, (r, k, v, w, u, s0))
+
+
+@pytest.mark.parametrize("B,S,H,K,chunk", [
+    (1, 16, 1, 8, 16),
+    (2, 37, 2, 16, 16),      # padded tail
+    (1, 64, 4, 32, 32),
+    (2, 16, 2, 64, 8),
+])
+def test_wkv6(B, S, H, K, chunk):
+    r, k, v, w, u, s0 = _wkv_inputs(B, S, H, K, seed=B * 100 + S)
+    y, sT = wkv6_op(r, k, v, w, u, s0, chunk=chunk)
+    tr = lambda x: x.transpose(0, 2, 1, 3)  # noqa: E731
+    y_ref, sT_ref = ref.wkv6_ref(tr(r), tr(k), tr(v), tr(w), u, s0)
+    np.testing.assert_allclose(np.asarray(tr(y)), np.asarray(y_ref),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sT_ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_wkv6_state_carry_composes():
+    """Running two halves with state carry == running the whole sequence
+    (the chunked-prefill invariant for SSM layers)."""
+    B, S, H, K = 1, 32, 2, 16
+    r, k, v, w, u, s0 = _wkv_inputs(B, S, H, K, seed=7)
+    y_full, sT_full = wkv6_op(r, k, v, w, u, s0)
+    half = S // 2
+    y1, s_mid = wkv6_op(r[:, :half], k[:, :half], v[:, :half], w[:, :half],
+                        u, s0)
+    y2, sT = wkv6_op(r[:, half:], k[:, half:], v[:, half:], w[:, half:],
+                     u, s_mid)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(sT), np.asarray(sT_full),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_model_pallas_path_matches_default(monkeypatch):
+    """End-to-end: REPRO_USE_PALLAS=1 reproduces the jnp model path."""
+    from repro.configs import get_config
+    from repro.models import forward_train, init_params
+    for arch in ["llama31_8b", "gemma2_9b", "rwkv6_3b"]:
+        cfg = get_config(arch, smoke=True)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                  cfg.vocab_size)
+        monkeypatch.setenv("REPRO_USE_PALLAS", "0")
+        a, _ = forward_train(cfg, params, toks)
+        monkeypatch.setenv("REPRO_USE_PALLAS", "1")
+        b, _ = forward_train(cfg, params, toks)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=2e-4, rtol=2e-4)

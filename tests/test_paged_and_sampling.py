@@ -1,0 +1,188 @@
+"""Paged KV cache (allocator + paged flash-decode kernel) and sampling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.paged_decode_attention import paged_decode_attention
+from repro.serving.engine import SamplingParams, sample_token
+from repro.serving.paged import (BlockAllocator, OutOfBlocks, PagedKV,
+                                 paged_decode_attention_ref)
+
+
+# ---------------------------------------------------------------------------
+# Block allocator
+# ---------------------------------------------------------------------------
+
+def test_allocator_basic():
+    al = BlockAllocator(4)
+    blocks = [al.alloc(1), al.alloc(1), al.alloc(2)]
+    assert len(set(blocks)) == 3
+    assert al.n_free == 1
+    assert al.utilization() == pytest.approx(0.75)
+    assert al.free_request(1) == 2
+    assert al.n_free == 3
+
+
+def test_allocator_oom_signals_backpressure():
+    al = BlockAllocator(2)
+    al.alloc(1)
+    al.alloc(1)
+    with pytest.raises(OutOfBlocks):
+        al.alloc(2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.booleans()),
+                min_size=1, max_size=40))
+def test_allocator_never_double_allocates(ops):
+    """Property: live blocks are unique; free returns exactly what was
+    owned; n_free + live == num_blocks at every step."""
+    al = BlockAllocator(8)
+    live: dict[int, int] = {}
+    for rid, do_free in ops:
+        if do_free:
+            n = al.free_request(rid)
+            owned = [b for b, r in live.items() if r == rid]
+            assert n == len(owned)
+            for b in owned:
+                del live[b]
+        else:
+            try:
+                b = al.alloc(rid)
+            except OutOfBlocks:
+                assert len(live) == 8
+                continue
+            assert b not in live
+            live[b] = rid
+        assert al.n_free + len(live) == 8
+
+
+def test_pagedkv_write_and_capacity():
+    kv = PagedKV(num_layers=2, num_blocks=8, num_slots=2,
+                 max_blocks_per_slot=4, n_kv_heads=2, head_dim=8,
+                 dtype=jnp.float32)
+    kv.ensure_capacity(0, rid=7, n_tokens=130)   # needs 2 blocks (BS=128)
+    assert (kv.tables[0] >= 0).sum() == 2
+    k = jnp.ones((2, 130, 2, 8))
+    kv.write_tokens(0, k, k * 2, start=0)
+    assert kv.lens[0] == 130
+    blk0 = int(kv.tables[0, 0])
+    assert float(kv.pool_k[0, blk0, 0, 0, 0]) == 1.0
+    assert float(kv.pool_v[1, blk0, 5, 1, 3]) == 2.0
+    kv.release(0, rid=7)
+    assert kv.alloc.n_free == 8
+
+
+# ---------------------------------------------------------------------------
+# Paged flash-decode kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,MB,NB,BS,Hq,Hkv,D", [
+    (1, 2, 4, 16, 2, 1, 16),
+    (3, 4, 12, 16, 4, 2, 32),
+    (2, 3, 8, 32, 8, 8, 64),      # MHA
+])
+def test_paged_decode_attention(B, MB, NB, BS, Hq, Hkv, D):
+    rng = np.random.RandomState(B * 100 + MB)
+    pool_k = jnp.asarray(rng.randn(NB, BS, Hkv, D).astype(np.float32))
+    pool_v = jnp.asarray(rng.randn(NB, BS, Hkv, D).astype(np.float32))
+    tables = np.full((B, MB), -1, np.int32)
+    perm = rng.permutation(NB)
+    j = 0
+    curs = []
+    for b in range(B):
+        n = rng.randint(1, MB + 1)
+        tables[b, :n] = perm[j:j + n]
+        j += n
+        curs.append(rng.randint(0, n * BS))
+    cur = jnp.asarray(curs, jnp.int32)
+    q = jnp.asarray(rng.randn(B, Hq, D).astype(np.float32))
+    out = paged_decode_attention(q, pool_k, pool_v, jnp.asarray(tables),
+                                 cur, interpret=True)
+    for b in range(B):
+        want = paged_decode_attention_ref(q[b], pool_k, pool_v,
+                                          jnp.asarray(tables[b]), cur[b])
+        np.testing.assert_allclose(np.asarray(out[b]), np.asarray(want),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_paged_attention_ignores_foreign_pages():
+    """Pages owned by other requests must not leak into the output."""
+    rng = np.random.RandomState(0)
+    NB, BS, H, D = 6, 16, 2, 16
+    pool_k = jnp.asarray(rng.randn(NB, BS, H, D).astype(np.float32))
+    pool_v = jnp.asarray(rng.randn(NB, BS, H, D).astype(np.float32))
+    q = jnp.asarray(rng.randn(1, 2, D).astype(np.float32))
+    t1 = jnp.asarray(np.array([[2, 4, -1]], np.int32))
+    cur = jnp.array([20], jnp.int32)
+    out1 = paged_decode_attention(q, pool_k, pool_v, t1, cur,
+                                  interpret=True)
+    # poison all pages NOT in the table
+    poison_k = pool_k.at[jnp.array([0, 1, 3, 5])].set(jnp.nan)
+    poison_v = pool_v.at[jnp.array([0, 1, 3, 5])].set(jnp.nan)
+    out2 = paged_decode_attention(q, poison_k, poison_v, t1, cur,
+                                  interpret=True)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+# ---------------------------------------------------------------------------
+# Sampling
+# ---------------------------------------------------------------------------
+
+def test_greedy_default():
+    logits = np.array([0.1, 3.0, -1.0, 2.9])
+    rng = np.random.RandomState(0)
+    assert sample_token(logits, SamplingParams(), rng) == 1
+
+
+def test_top_k_restricts_support():
+    logits = np.array([5.0, 4.0, -10.0, -10.0])
+    rng = np.random.RandomState(0)
+    sp = SamplingParams(temperature=1.0, top_k=2, seed=0)
+    draws = {sample_token(logits, sp, rng) for _ in range(50)}
+    assert draws <= {0, 1}
+
+
+def test_top_p_restricts_support():
+    logits = np.array([10.0, 0.0, 0.0, 0.0])
+    rng = np.random.RandomState(0)
+    sp = SamplingParams(temperature=1.0, top_p=0.9)
+    draws = {sample_token(logits, sp, rng) for _ in range(50)}
+    assert draws == {0}
+
+
+def test_temperature_zero_matches_argmax_under_ties_free_logits():
+    rng = np.random.RandomState(0)
+    for _ in range(10):
+        logits = rng.randn(32)
+        assert sample_token(logits, SamplingParams(), rng) \
+            == int(np.argmax(logits))
+
+
+def test_engine_sampled_generation_reproducible():
+    """Same sampling seed -> identical stochastic streams."""
+    from repro.configs import get_config
+    from repro.models import init_params
+    from repro.serving import Engine, Request
+    cfg = get_config("qwen2_0_5b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(3)
+    prompt = rng.randint(0, cfg.vocab_size, size=(9,)).astype(np.int32)
+    outs = []
+    for _ in range(2):
+        eng = Engine(cfg, params, num_slots=1, max_len=48)
+        r = Request(rid=0, prompt=prompt, max_new_tokens=6,
+                    sampling=SamplingParams(temperature=0.8, top_k=20,
+                                            seed=42))
+        eng.add_request(r)
+        eng.run_until_drained()
+        outs.append(list(r.output))
+    assert outs[0] == outs[1]
+    # and differs from greedy (with overwhelming probability)
+    eng = Engine(cfg, params, num_slots=1, max_len=48)
+    g = Request(rid=0, prompt=prompt, max_new_tokens=6)
+    eng.add_request(g)
+    eng.run_until_drained()
+    assert isinstance(g.output, list)

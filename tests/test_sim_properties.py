@@ -1,0 +1,66 @@
+"""Hypothesis property tests over simulator / planning invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core import CHIPS, InstanceSpec, plan_convertible, profile
+from repro.sim import get_trace
+from repro.sim.traces import TRACES, generate
+
+
+@pytest.fixture(scope="module")
+def prof():
+    return profile(get_config("llama31_8b"), InstanceSpec(CHIPS["a100"], 1))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from(list(TRACES)), st.integers(0, 5),
+       st.floats(1.0, 20.0))
+def test_trace_generator_invariants(name, seed, rps):
+    trace = generate(TRACES[name], 60.0, rps, seed)
+    for r in trace:
+        assert 0.0 <= r.t < 60.0
+        assert 32 <= r.in_len <= 8192
+        assert 16 <= r.out_len <= 640
+    ts = [r.t for r in trace]
+    assert ts == sorted(ts)
+    ids = [r.rid for r in trace]
+    assert len(set(ids)) == len(ids)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.floats(0.05, 0.8), st.integers(2, 32))
+def test_convertible_pool_monotone_in_burst_ratio(ratio, max_dec):
+    cfg = get_config("llama31_8b")
+    inst = InstanceSpec(CHIPS["a100"], 1)
+    lo = plan_convertible(cfg, inst, 32, 1200.0, ratio / 2, max_dec)
+    hi = plan_convertible(cfg, inst, 32, 1200.0, ratio, max_dec)
+    assert hi.pool_size >= lo.pool_size
+    assert lo.pool_size >= 1
+    assert hi.chunk_size == lo.chunk_size    # chunk is SLO-, not burst-bound
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 3))
+def test_sim_report_invariants(seed):
+    from repro.sim.runner import run_policy
+    rep = run_policy("tokenscale", "azure_conv", duration=25.0, rps=6.0,
+                     seed=seed)
+    assert 0.0 <= rep.slo_attainment() <= 1.0
+    assert 0.0 <= rep.ttft_attainment() <= 1.0
+    assert 0.0 <= rep.tpot_attainment() <= 1.0
+    # at least (1 prefiller + 1 decoder + 1 convertible) always resident
+    assert rep.gpu_seconds >= 3 * rep.duration * 0.9
+    for r in rep.requests:
+        if r.t_finish >= 0:
+            assert r.t_finish >= r.src.t
+            assert r.ttft >= 0.0
+            assert r.tpot >= 0.0
+
+
+def test_velocity_profile_positive(prof):
+    assert prof.v_prefill > 0
+    assert prof.v_network > 0
+    assert all(v > 0 for v in prof.v_decode.values())
+    assert all(b >= 1 for b in prof.max_batch.values())
