@@ -2,6 +2,8 @@
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run fig9 fig14 # a subset
+    PYTHONPATH=src python -m benchmarks.run --engine=events fig9
+                                                       # event-driven engine
 
 Each benchmark prints ``name,metric,value`` CSV rows (plus section
 headers).  Simulation benches replay bursty traces through the real
@@ -25,10 +27,15 @@ from repro.core import (CHIPS, InstanceSpec, OutputPredictor,
                         TokenScalePolicy, plan_convertible, profile)
 from repro.core.autoscaler import ComboPolicy
 from repro.core.velocity import BUCKETS
-from repro.sim import Cluster, get_trace, step_trace
-from repro.sim.runner import compare_policies, make_policy, run_policy
+from repro.sim import get_trace, step_trace
+from repro.sim.runner import (compare_engines, compare_policies, get_engine,
+                              make_policy, run_policy)
 
 ROWS: list[str] = []
+
+# simulation engine used by every sim-shaped bench; --engine=events switches
+# the whole harness to the discrete-event simulator (DESIGN.md)
+ENGINE = "fluid"
 
 
 def emit(bench: str, metric: str, value):
@@ -101,7 +108,8 @@ def fig9_end_to_end(model="llama31_8b", tp=1, tag="small",
                     duration=120.0, rps=10.0):
     for trace in ["azure_conv", "azure_code", "mixed"]:
         reps = compare_policies(trace, model=model, tp=tp,
-                                duration=duration, rps=rps, seed=0)
+                                duration=duration, rps=rps, seed=0,
+                                engine=ENGINE)
         for name, r in reps.items():
             emit("fig9", f"{tag},{trace},{name},slo_pct",
                  100 * r.slo_attainment())
@@ -149,8 +157,9 @@ def _run_step_trace(policy_name: str):
                          mean_out=float(np.mean([r.out_len for r in trace])))
     conv = plan_convertible(cfg, inst, 32, 1200.0, 0.2, 8)
     n_conv = 1 if policy_name == "tokenscale" else 0
-    cl = Cluster(cfg, inst, prof, policy, OutputPredictor(0.85, 3),
-                 conv_cfg=conv, n_convertible=n_conv)
+    cl = get_engine(ENGINE)(cfg, inst, prof, policy,
+                           OutputPredictor(0.85, 3),
+                           conv_cfg=conv, n_convertible=n_conv)
     return cl.run(trace, 30.0)
 
 
@@ -189,9 +198,9 @@ def fig11_provision_correlation():
     conv = plan_convertible(cfg, inst, 32, 1200.0, 0.2, 8)
     for pol in ["tokenscale", "distserve", "aibrix", "blitzscale"]:
         policy = make_policy(pol, prof, 1, mean_in, mean_out)
-        cl = Cluster(cfg, inst, prof, policy, OutputPredictor(0.85, 0),
-                     conv_cfg=conv,
-                     n_convertible=1 if pol == "tokenscale" else 0)
+        cl = get_engine(ENGINE)(cfg, inst, prof, policy,
+                               OutputPredictor(0.85, 0), conv_cfg=conv,
+                               n_convertible=1 if pol == "tokenscale" else 0)
         rep = cl.run(list(trace), float(T - 1))
         prov_p = np.zeros(T)
         prov_d = np.zeros(T)
@@ -217,7 +226,7 @@ def fig11_provision_correlation():
 def fig12_predictor_accuracy():
     for acc in [1.0, 0.85, 0.7, 0.5]:
         rep = run_policy("tokenscale", "mixed", duration=90.0, rps=8.0,
-                         seed=2, predictor_accuracy=acc)
+                         seed=2, predictor_accuracy=acc, engine=ENGINE)
         emit("fig12", f"acc={acc},slo_pct", 100 * rep.slo_attainment())
         emit("fig12", f"acc={acc},avg_gpus", rep.avg_gpus())
 
@@ -229,7 +238,7 @@ def fig12_predictor_accuracy():
 def fig13_convertible_count():
     for n in [0, 1, 2, 3]:
         rep = run_policy("tokenscale", "mixed", duration=90.0, rps=8.0,
-                         seed=1, n_convertible=n)
+                         seed=1, n_convertible=n, engine=ENGINE)
         emit("fig13", f"n_convertible={n},slo_pct",
              100 * rep.slo_attainment())
         emit("fig13", f"n_convertible={n},ttft_pct",
@@ -262,8 +271,9 @@ def fig14_ablation():
     }
     conv = plan_convertible(cfg, inst, 32, 1200.0, 0.2, 8)
     for name, (policy, n_conv) in variants.items():
-        cl = Cluster(cfg, inst, prof, policy, OutputPredictor(0.85, 0),
-                     conv_cfg=conv, n_convertible=n_conv)
+        cl = get_engine(ENGINE)(cfg, inst, prof, policy,
+                               OutputPredictor(0.85, 0),
+                               conv_cfg=conv, n_convertible=n_conv)
         rep = cl.run(list(trace), 150.0)
         emit("fig14", f"{name},slo_pct", 100 * rep.slo_attainment())
         emit("fig14", f"{name},ttft_pct", 100 * rep.ttft_attainment())
@@ -279,7 +289,7 @@ def fig15_h100():
     for trace in ["azure_conv", "azure_code", "mixed"]:
         for pol in ["tokenscale", "distserve"]:
             rep = run_policy(pol, trace, chip="h100", duration=90.0,
-                             rps=10.0, seed=0)
+                             rps=10.0, seed=0, engine=ENGINE)
             emit("fig15", f"h100,{trace},{pol},slo_pct",
                  100 * rep.slo_attainment())
             emit("fig15", f"h100,{trace},{pol},avg_gpus", rep.avg_gpus())
@@ -320,7 +330,8 @@ def engine_microbench():
 
 def sim_throughput():
     t0 = time.perf_counter()
-    rep = run_policy("tokenscale", "mixed", duration=60.0, rps=8.0, seed=0)
+    rep = run_policy("tokenscale", "mixed", duration=60.0, rps=8.0,
+                     seed=0, engine=ENGINE)
     dt = time.perf_counter() - t0
     emit("micro", "sim_requests_per_wall_s", len(rep.requests) / dt)
 
@@ -348,9 +359,9 @@ def kv8_velocity():
     emit("kv8", "eq3_decoders_int8", _m.ceil(n8))
     # end-to-end: same trace, int8 profile
     r16 = run_policy("tokenscale", "mixed", duration=90.0, rps=10.0,
-                     seed=0, prof=p16)
+                     seed=0, prof=p16, engine=ENGINE)
     r8 = run_policy("tokenscale", "mixed", duration=90.0, rps=10.0,
-                    seed=0, prof=p8)
+                    seed=0, prof=p8, engine=ENGINE)
     emit("kv8", "e2e_bf16_slo_pct", 100 * r16.slo_attainment())
     emit("kv8", "e2e_bf16_gpus", r16.avg_gpus())
     emit("kv8", "e2e_int8_slo_pct", 100 * r8.slo_attainment())
@@ -415,6 +426,44 @@ def multipod_scaling():
                          b[term] / a[term])
 
 
+# ---------------------------------------------------------------------------
+# Differential validation: fluid vs event engine on identical inputs
+# ---------------------------------------------------------------------------
+
+def diffval():
+    """Agreement between the dt-stepped fluid simulator and the
+    discrete-event simulator on throughput / mean TTFT / mean TPOT
+    (the bench twin of tests/test_sim_differential.py)."""
+    for trace in ["azure_conv", "mixed"]:
+        for pol in ["tokenscale", "distserve"]:
+            reps = compare_engines(pol, trace, duration=60.0, rps=8.0,
+                                   seed=0)
+            fl, ev = reps["fluid"], reps["events"]
+            emit("diffval", f"{trace},{pol},thr_fluid", fl.throughput())
+            emit("diffval", f"{trace},{pol},thr_events", ev.throughput())
+            emit("diffval", f"{trace},{pol},ttft_ms_fluid",
+                 1e3 * fl.mean("ttft"))
+            emit("diffval", f"{trace},{pol},ttft_ms_events",
+                 1e3 * ev.mean("ttft"))
+            emit("diffval", f"{trace},{pol},tpot_ms_fluid",
+                 1e3 * fl.mean("tpot"))
+            emit("diffval", f"{trace},{pol},tpot_ms_events",
+                 1e3 * ev.mean("tpot"))
+            emit("diffval", f"{trace},{pol},ttft_p99_ms_events",
+                 1e3 * ev.percentile("ttft", 99))
+
+
+def smoke():
+    """~10 s sanity pass for scripts/check.sh: one small config through
+    both engines."""
+    for eng in ["fluid", "events"]:
+        rep = run_policy("tokenscale", "azure_conv", duration=20.0, rps=6.0,
+                         seed=0, engine=eng)
+        emit("smoke", f"{eng},requests", len(rep.requests))
+        emit("smoke", f"{eng},slo_pct", 100 * rep.slo_attainment())
+        emit("smoke", f"{eng},avg_gpus", rep.avg_gpus())
+
+
 BENCHES = {
     "fig3": fig3_overprovisioning,
     "table2": table2_velocities,
@@ -432,11 +481,21 @@ BENCHES = {
     "pd": pd_runtime,
     "kv8": kv8_velocity,
     "multipod": multipod_scaling,
+    "diffval": diffval,
+    "smoke": smoke,
 }
 
 
 def main() -> None:
-    names = sys.argv[1:] or list(BENCHES)
+    global ENGINE
+    args = []
+    for a in sys.argv[1:]:
+        if a.startswith("--engine="):
+            ENGINE = a.split("=", 1)[1]
+            get_engine(ENGINE)      # fail fast on unknown engine names
+        else:
+            args.append(a)
+    names = args or list(BENCHES)
     print("bench,metric,value")
     for n in names:
         t0 = time.perf_counter()

@@ -3,17 +3,23 @@ a 20x RPS burst hits at t=10 s; compare TTFT with and without the
 Convertible Decoder (and against the three baseline autoscalers).
 
     PYTHONPATH=src python examples/burst_absorption.py
+    PYTHONPATH=src python examples/burst_absorption.py --engine=events
+
+``--engine=events`` runs the discrete-event simulator (exact per-request
+tails) instead of the default dt-stepped fluid model; see DESIGN.md.
 """
+import sys
+
 import numpy as np
 
 from repro.configs import get_config
 from repro.core import (CHIPS, InstanceSpec, OutputPredictor,
                         plan_convertible, profile)
-from repro.sim import Cluster, step_trace
-from repro.sim.runner import make_policy
+from repro.sim import step_trace
+from repro.sim.runner import get_engine, make_policy
 
 
-def run(policy_name: str, n_convertible: int):
+def run(policy_name: str, n_convertible: int, engine: str = "fluid"):
     cfg = get_config("llama-3.1-8b")
     inst = InstanceSpec(CHIPS["a100"], tp=1)
     prof = profile(cfg, inst)
@@ -23,8 +29,8 @@ def run(policy_name: str, n_convertible: int):
                          mean_in=float(np.mean([r.in_len for r in trace])),
                          mean_out=float(np.mean([r.out_len for r in trace])))
     conv = plan_convertible(cfg, inst, 32, 1200.0, 0.2, 8)
-    cl = Cluster(cfg, inst, prof, policy, OutputPredictor(0.85, 3),
-                 conv_cfg=conv, n_convertible=n_convertible)
+    cl = get_engine(engine)(cfg, inst, prof, policy, OutputPredictor(0.85, 3),
+                            conv_cfg=conv, n_convertible=n_convertible)
     rep = cl.run(trace, 30.0)
     burst = [r.ttft * 1e3 for r in rep.requests
              if 10.0 <= r.src.t < 14.0 and r.t_first_token >= 0]
@@ -32,11 +38,16 @@ def run(policy_name: str, n_convertible: int):
 
 
 def main():
-    print("20x burst at t=10s for 4s; p99 TTFT of in-burst requests:")
+    engine = "fluid"
+    for a in sys.argv[1:]:
+        if a.startswith("--engine="):
+            engine = a.split("=", 1)[1]
+    print(f"[{engine} engine] 20x burst at t=10s for 4s; "
+          "p99 TTFT of in-burst requests:")
     for name, n_conv in [("tokenscale", 1), ("tokenscale", 0),
                          ("blitzscale", 0), ("distserve", 0),
                          ("aibrix", 0)]:
-        rep, p99 = run(name, n_conv)
+        rep, p99 = run(name, n_conv, engine)
         label = f"{name}{' +convertible' if n_conv else ''}"
         print(f"  {label:26s} burst p99 TTFT = {p99:8.0f} ms   "
               f"SLO = {rep.slo_attainment() * 100:5.1f}%")

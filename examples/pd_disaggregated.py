@@ -6,7 +6,14 @@ and the Scaler reacts to live Observations — the whole TokenScale
 architecture, executing actual models:
 
     PYTHONPATH=src python examples/pd_disaggregated.py
+    PYTHONPATH=src python examples/pd_disaggregated.py --engine=events
+
+After the real-engine run, the same PD architecture is cross-checked at
+cluster scale on the analytic simulator; ``--engine`` picks the fluid or
+the discrete-event implementation (DESIGN.md).
 """
+import sys
+
 import jax
 import numpy as np
 
@@ -16,7 +23,32 @@ from repro.models import init_params
 from repro.serving import PDCluster, Request
 
 
+def sim_crosscheck(engine: str):
+    """The same PD-disaggregated scenario shape at cluster scale, on the
+    analytic simulator (which engine is selectable)."""
+    from repro.sim.runner import run_policy
+    rep = run_policy("tokenscale", "azure_conv", duration=30.0, rps=6.0,
+                     seed=0, engine=engine)
+    print(f"\n[{engine} sim cross-check] {len(rep.requests)} requests, "
+          f"SLO = {rep.slo_attainment() * 100:.1f}%, "
+          f"p99 TTFT = {rep.percentile('ttft', 99) * 1e3:.0f} ms, "
+          f"avg GPUs = {rep.avg_gpus():.2f}")
+
+
+def parse_engine(argv):
+    """Validate --engine up front: the real-engine demo takes minutes, so
+    a typo'd engine name must fail before it, not after."""
+    from repro.sim.runner import get_engine
+    engine = "fluid"
+    for a in argv:
+        if a.startswith("--engine="):
+            engine = a.split("=", 1)[1]
+    get_engine(engine)
+    return engine
+
+
 def main():
+    engine = parse_engine(sys.argv[1:])
     cfg = get_config("llama-3.1-8b", smoke=True)
     params = init_params(cfg, jax.random.PRNGKey(0))
     prof = profile(get_config("llama-3.1-8b"), InstanceSpec(CHIPS["v5e"], 4))
@@ -52,6 +84,8 @@ def main():
           f"{cl.measured_network_velocity():,.0f} tok/s")
     for r in reqs[:3] + reqs[-1:]:
         print(f"  req{r.rid}: {r.output}")
+
+    sim_crosscheck(engine)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# One-command pre-push gate: tier-1 tests + a ~10 s benchmark smoke.
+#
+#   scripts/check.sh          # tier-1 (fast default: -m "not slow") + smoke
+#   scripts/check.sh --slow   # additionally run the slow marker set
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+if [[ "${1:-}" == "--slow" ]]; then
+    echo "== slow tests =="
+    python -m pytest -x -q -m slow
+fi
+
+echo "== benchmark smoke (both sim engines) =="
+python -m benchmarks.run smoke
+
+echo "OK: all checks passed"

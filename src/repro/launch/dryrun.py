@@ -29,8 +29,8 @@ import jax.numpy as jnp
 
 from repro.configs import (ARCH_IDS, INPUT_SHAPES, InputShape, ModelConfig,
                            get_config, input_specs, long_context_variant)
-from repro.launch.mesh import (act_rules, batch_axes, make_production_mesh,
-                               needs_fsdp, param_rules)
+from repro.launch.mesh import (act_rules, batch_axes, compat_set_mesh,
+                               make_production_mesh, needs_fsdp, param_rules)
 from repro.launch.roofline import (Roofline, analyze_hlo,
                                    model_flops_estimate)
 from repro.models import decode_step, prefill
@@ -190,7 +190,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
     fn, args, shards, cfg, mesh, rules_a, shape = built
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh):
+        with compat_set_mesh(mesh):
             with axis_rules(rules_a, mesh):
                 lowered = jax.jit(fn, in_shardings=shards).lower(*args)
             t_lower = time.time() - t0
@@ -198,6 +198,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool = False,
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):     # older JAX: list of one dict
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         counts = analyze_hlo(hlo)
         chips = mesh.devices.size

@@ -19,7 +19,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models.params import _RWKV_LORA  # lora width shared with decls
-from repro.sharding import current_mesh, current_rules, shard
+from repro.sharding import (compat_shard_map, current_mesh, current_rules,
+                            shard)
 
 NEG_INF = -2.0 ** 30
 
@@ -488,9 +489,8 @@ def _moe_ep_path(cfg: ModelConfig, p, h, mesh, ep_axes):
                 P(ep_axes, None, ff_axes or None),
                 P(ep_axes, ff_axes or None, None))
     out_specs = (P(bspec), P())
-    return jax.shard_map(
+    return compat_shard_map(
         local_moe, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False,
     )(h, p["router"], p["we_gate"], p["we_up"], p["we_down"])
 
 

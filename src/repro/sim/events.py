@@ -1,0 +1,201 @@
+"""Discrete-event PD-disaggregated cluster simulator.
+
+Same cluster, same roofline, same *unmodified* control plane as the fluid
+engine (``sim.cluster.Cluster``) — but time advances on an event heap
+instead of fixed dt ticks, so request-level tail behavior is exact:
+
+  * decode runs per-iteration continuous batching: each decoder iteration
+    is one event whose length is the shared roofline ``Decoder.iter_time``;
+    every resident request emits exactly one token per iteration, and
+    admissions join at iteration boundaries (the mechanism DistServe/
+    DynaServe show dominates tail latency);
+  * prefill is serialized per prefiller (batch ~1): one completion event
+    per request at ``in_len / v_prefill``;
+  * KVC transfers complete at interconnect-bandwidth delay events;
+  * instance startup/conversion appears as wake events at ``ready_t``;
+  * autoscaling fires every ``scale_interval`` as in the fluid engine.
+
+TTFT/TPOT therefore come out strictly per-request (non-smeared): admission
+and finish happen at exact event timestamps and ``generated`` advances in
+whole tokens.  The differential suite (tests/test_sim_differential.py)
+asserts this engine and the fluid engine agree on throughput, mean
+TTFT/TPOT, and scaling decisions for every trace x policy.
+
+Fidelity choices and the fluid-vs-event comparison are documented in
+DESIGN.md.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Optional
+
+from repro.sim.instances import ClusterBase, Decoder, Prefiller, SimReport, \
+    SimRequest
+from repro.sim.traces import TraceRequest
+
+# granularity cap for prefill-only convertible iterations: with no decode
+# batch resident there is no natural iteration boundary, so progress is
+# checkpointed at least this often (the TPOT-SLO-scale chunk cadence)
+_CONV_PREFILL_QUANTUM = 0.05
+
+
+class EventCluster(ClusterBase):
+    """Event-driven engine over the shared instance/control-plane layer."""
+
+    engine = "events"
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._heap: list[tuple[float, int, str, tuple]] = []
+        self._seq = itertools.count()
+
+    # ------------------------------------------------------------------
+    def _push(self, t: float, kind: str, *data):
+        heapq.heappush(self._heap, (t, next(self._seq), kind, data))
+
+    # ------------------------------------------------------------------
+    def run(self, trace: list[TraceRequest],
+            duration: Optional[float] = None) -> SimReport:
+        trace = sorted(trace, key=lambda r: r.t)
+        t_end = duration or (trace[-1].t + 60.0 if trace else 60.0)
+        for tr in trace:
+            if tr.t < t_end:
+                self._push(tr.t, "arrival", SimRequest(tr))
+        self._push(0.0, "scale")
+        self._push(0.0, "snapshot")
+        t_cur = 0.0
+        while self._heap:
+            te, _, kind, data = heapq.heappop(self._heap)
+            if te >= t_end:
+                break
+            # integrate GPU-seconds over the piecewise-constant fleet
+            self.gpu_seconds += self._gpu_count(t_cur) * (te - t_cur)
+            t_cur = te
+            getattr(self, "_ev_" + kind)(te, *data)
+        self.gpu_seconds += self._gpu_count(t_cur) * (t_end - t_cur)
+        return self._report(t_end)
+
+    # ------------------------------------------------------------------
+    # event handlers
+    # ------------------------------------------------------------------
+    def _ev_arrival(self, t: float, req: SimRequest):
+        self._on_arrival(req, t)
+
+    def _ev_scale(self, t: float):
+        self._scale(t)
+        self._drain_wait_queue(t)
+        self._admit_pending(t)
+        self._push(t + self.scale_interval, "scale")
+
+    def _ev_snapshot(self, t: float):
+        self.timeline.append(self._snapshot(t))
+        self._push(t + 0.2, "snapshot")
+
+    def _ev_wake(self, t: float, inst):
+        """A provisioned instance finished booting."""
+        inst._wake_scheduled = False
+        if isinstance(inst, Prefiller):
+            if inst in self.prefillers:
+                self._drain_wait_queue(t)
+                self._kick_prefiller(inst, t)
+        else:
+            if inst in self.decoders + self.convertibles:
+                self._drain_wait_queue(t)
+                self._admit_pending(t)
+                self._kick_decoder(inst, t)
+
+    def _ev_prefill_done(self, t: float, p: Prefiller, req: SimRequest):
+        p._busy = False
+        if p not in self.prefillers:
+            # instance was scaled down mid-flight: requeue its head on the
+            # central queue (should not happen — only idle instances are
+            # removed — but stay safe)
+            self.wait_queue.append(req)
+            return
+        if p.queue and p.queue[0][0] is req:
+            p.queue.pop(0)
+        kv_ready_t, _ = self._to_network(req, t)   # sets t_prefill_end
+        self._push(kv_ready_t, "kv_ready")
+        self._drain_wait_queue(t)          # prefill capacity freed (§IV-E)
+        self._kick_prefiller(p, t)
+
+    def _ev_kv_ready(self, t: float):
+        self._admit_pending(t)
+
+    def _ev_iter_done(self, t: float, d: Decoder,
+                      batch: list[SimRequest], it: float):
+        d._iter_pending = False
+        if d not in self.decoders + self.convertibles:
+            return
+        # one token per resident request for this iteration
+        for r in batch:
+            if r.t_finish >= 0:
+                continue
+            r.generated += 1.0
+            r.decode_time += it
+            if r.generated >= r.src.out_len:
+                r.t_finish = t
+                self.finished.append(r)
+        d.active = [r for r in d.active if r.t_finish < 0]
+        # co-scheduled convertible prefill progress (Eq. 5 restricted rate)
+        if d.is_convertible and d.prefill_q and d.conv:
+            d.advance_prefill(d.conv.v_prefill * it, t)
+        self._admit_pending(t)             # memory freed by completions
+        self._kick_decoder(d, t)
+
+    # ------------------------------------------------------------------
+    # scheduling helpers
+    # ------------------------------------------------------------------
+    def _kick_prefiller(self, p: Prefiller, t: float):
+        if getattr(p, "_busy", False) or not p.queue:
+            return
+        if not p.ready(t):
+            self._schedule_wake(p)
+            return
+        req, rem = p.queue[0]
+        p._busy = True
+        self._push(t + rem / max(p.v_p, 1e-9), "prefill_done", p, req)
+
+    def _kick_decoder(self, d: Decoder, t: float):
+        if getattr(d, "_iter_pending", False):
+            return
+        if not d.ready(t):
+            self._schedule_wake(d)
+            return
+        if d.active:
+            it = d.iter_time()
+            d._iter_pending = True
+            self._push(t + it, "iter_done", d, list(d.active), it)
+        elif d.is_convertible and d.prefill_q and d.conv:
+            # prefill-only "iteration": no decode batch to pace it, so
+            # checkpoint progress at the chunk cadence
+            head_rem = d.prefill_q[0][1]
+            v = max(d.conv.v_prefill, 1e-9)
+            it = min(head_rem / v, _CONV_PREFILL_QUANTUM)
+            d._iter_pending = True
+            self._push(t + it, "iter_done", d, [], it)
+
+    def _schedule_wake(self, inst):
+        if not getattr(inst, "_wake_scheduled", False):
+            inst._wake_scheduled = True
+            self._push(inst.ready_t, "wake", inst)
+
+    def _after_scale(self, t: float):
+        for inst in self.prefillers + self.decoders + self.convertibles:
+            if not inst.ready(t):
+                self._schedule_wake(inst)
+
+    # ------------------------------------------------------------------
+    # control-plane hooks
+    # ------------------------------------------------------------------
+    def _submit_prefill_work(self, tgt, kind: str, req: SimRequest, t: float):
+        super()._submit_prefill_work(tgt, kind, req, t)
+        if kind == "prefiller":
+            self._kick_prefiller(tgt, t)
+        else:
+            self._kick_decoder(tgt, t)
+
+    def _after_admit(self, d: Decoder, t: float):
+        self._kick_decoder(d, t)           # the request joins the next
+                                           # iteration boundary

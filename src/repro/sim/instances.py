@@ -1,0 +1,546 @@
+"""Shared simulator substrate: instances, roofline costs, metrics, control
+plane.
+
+Both cluster engines — the dt-stepped *fluid* model (``sim.cluster``) and
+the discrete-*event* model (``sim.events``) — are thin drivers over this
+module.  Everything here is engine-agnostic:
+
+  * ``ModelCost``     — cached roofline constants per model (one cost model);
+  * ``Prefiller`` / ``Decoder`` — instance state, memory accounting,
+    iteration-time roofline, convertible-prefill progress;
+  * ``SimRequest`` / ``SimReport`` — per-request timestamps and the SLO
+    metrics pipeline (one metrics pipeline);
+  * ``ClusterBase``   — the control-plane glue that executes the *real*
+    TokenScale implementation (``core.autoscaler``, ``core.router``,
+    ``core.convertible``) unmodified: arrival routing (Alg. 1), wait-queue
+    re-evaluation (§IV-E), Observation construction, and scaling.
+
+Engines differ only in how they advance time (see DESIGN.md).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import hardware as hw
+from repro.core.autoscaler import Observation, Policy, TokenScalePolicy
+from repro.core.convertible import ConvertibleConfig
+from repro.core.hardware import InstanceSpec
+from repro.core.predictor import OutputPredictor
+from repro.core.router import TPOT_SLO, BurstDetector, Router, ttft_slo
+from repro.core.velocity import BUCKET_OUTPUT, VelocityProfile, bucket_of
+
+
+@dataclass
+class SimRequest:
+    src: "TraceRequest"  # noqa: F821  (sim.traces.TraceRequest)
+    bucket_pred: str = ""
+    t_prefill_start: float = -1.0
+    t_prefill_end: float = -1.0
+    t_kv_ready: float = -1.0
+    t_first_token: float = -1.0
+    t_decode_start: float = -1.0
+    t_finish: float = -1.0
+    generated: float = 0.0
+    decode_time: float = 0.0
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first_token - self.src.t
+
+    @property
+    def tpot(self) -> float:
+        if self.src.out_len <= 1 or self.t_finish < 0:
+            return 0.0
+        return self.decode_time / max(self.src.out_len, 1)
+
+    @property
+    def bucket_true(self) -> str:
+        return bucket_of(self.src.in_len, self.src.out_len)
+
+
+@dataclass
+class ModelCost:
+    """Cached per-model roofline constants for the hot loop."""
+    flops_tok: float
+    kv_tok: float
+    state_fix: float
+    w_bytes: float
+    aw_bytes: float
+    attn_coef: float          # 4*H*Dh summed over attn layers
+
+    @classmethod
+    def of(cls, cfg: ModelConfig):
+        return cls(
+            flops_tok=hw.flops_per_token(cfg),
+            kv_tok=hw.kv_bytes_per_token(cfg),
+            state_fix=hw.state_bytes_fixed(cfg),
+            w_bytes=hw.weight_bytes(cfg),
+            aw_bytes=hw.active_weight_bytes(cfg),
+            attn_coef=hw.attn_flops_per_token(cfg, 1.0))
+
+
+# Backwards-compatible alias (pre-refactor name in sim.cluster).
+_ModelCost = ModelCost
+
+
+class Instance:
+    def __init__(self, iid: int, inst: InstanceSpec, cost: ModelCost,
+                 ready_t: float):
+        self.iid = iid
+        self.spec = inst
+        self.cost = cost
+        self.ready_t = ready_t
+        self.draining = False
+
+    def ready(self, t: float) -> bool:
+        return t >= self.ready_t
+
+
+class Prefiller(Instance):
+    def __init__(self, iid, inst, cost, ready_t, v_prefill: float):
+        super().__init__(iid, inst, cost, ready_t)
+        self.v_p = v_prefill
+        self.queue: list[tuple[SimRequest, float]] = []   # (req, remaining)
+
+    def inflight_tokens(self) -> float:
+        return sum(r for _, r in self.queue)
+
+    def prefill_velocity(self) -> float:
+        return self.v_p
+
+    def submit(self, req: SimRequest, t: float):
+        if req.t_prefill_start < 0:
+            req.t_prefill_start = t
+        self.queue.append((req, float(req.src.in_len)))
+
+    def advance(self, budget: float) -> list[SimRequest]:
+        """Serialized head-of-line progress by `budget` tokens; returns
+        requests whose prefill completed."""
+        done = []
+        while self.queue and budget > 0:
+            req, rem = self.queue[0]
+            take = min(rem, budget)
+            rem -= take
+            budget -= take
+            if rem <= 1e-9:
+                self.queue.pop(0)
+                done.append(req)
+            else:
+                self.queue[0] = (req, rem)
+        return done
+
+    def tick(self, t: float, dt: float) -> list[SimRequest]:
+        """Fluid engine: advance by dt; return completed prefills."""
+        if not self.ready(t):
+            return []
+        return self.advance(self.v_p * dt)
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue
+
+
+class Decoder(Instance):
+    is_convertible = False
+
+    def __init__(self, iid, inst, cost, ready_t,
+                 conv: Optional[ConvertibleConfig] = None):
+        super().__init__(iid, inst, cost, ready_t)
+        self.active: list[SimRequest] = []
+        self.conv = conv
+        self.prefill_q: list[tuple[SimRequest, float]] = []
+
+    # ---- memory ----
+    def mem_used(self) -> float:
+        c = self.cost
+        return sum((r.src.in_len + r.generated) * c.kv_tok + c.state_fix
+                   for r in self.active)
+
+    def mem_cap(self) -> float:
+        reserve = self.conv.mem_reserved if (self.is_convertible
+                                             and self.conv) else 0.0
+        return self.spec.hbm_cap * 0.9 - self.cost.w_bytes - reserve
+
+    def mem_util(self) -> float:
+        return min(self.mem_used() / max(self.mem_cap(), 1.0), 1.5)
+
+    def can_admit(self, req: SimRequest) -> bool:
+        c = self.cost
+        need = (req.src.in_len + req.src.out_len) * c.kv_tok + c.state_fix
+        return self.mem_used() + need <= self.mem_cap()
+
+    def inflight_of_bucket(self, bucket: str) -> int:
+        return sum(1 for r in self.active if r.bucket_pred == bucket)
+
+    # ---- convertible prefill (Alg. 1 round 2 target) ----
+    def inflight_tokens(self) -> float:
+        return sum(rem for _, rem in self.prefill_q)
+
+    def prefill_velocity(self) -> float:
+        return self.conv.v_prefill if self.conv else 0.0
+
+    def submit_prefill(self, req: SimRequest, t: float):
+        if req.t_prefill_start < 0:
+            req.t_prefill_start = t
+        self.prefill_q.append((req, float(req.src.in_len)))
+
+    def advance_prefill(self, budget: float, t: float) -> list[SimRequest]:
+        """Restricted-velocity convertible prefill (Eq. 5); completed
+        requests transition seamlessly to decode on the same instance.
+        Returns the requests that completed prefill."""
+        done = []
+        while self.prefill_q and budget > 0:
+            req, rem = self.prefill_q[0]
+            take = min(rem, budget)
+            rem -= take
+            budget -= take
+            if rem <= 1e-9:
+                self.prefill_q.pop(0)
+                req.t_prefill_end = t
+                req.t_kv_ready = t        # on-box: no KVC transfer
+                done.append(req)
+                self.admit(req, t)
+            else:
+                self.prefill_q[0] = (req, rem)
+        return done
+
+    # ---- decode ----
+    def admit(self, req: SimRequest, t: float):
+        req.t_decode_start = t
+        if req.t_first_token < 0:
+            req.t_first_token = t     # first decode iteration emits token 1
+        self.active.append(req)
+
+    def iter_time(self) -> float:
+        b = len(self.active)
+        if b == 0:
+            return 0.0
+        c = self.cost
+        avg_ctx = sum(r.src.in_len + r.generated
+                      for r in self.active) / b
+        mem = c.aw_bytes + b * (c.kv_tok * avg_ctx + c.state_fix)
+        f = b * (c.flops_tok + c.attn_coef * avg_ctx)
+        if self.is_convertible and self.prefill_q and self.conv:
+            # mixed iteration: the chunk occupies (chunk - batch) extra slots
+            chunk = self.conv.chunk_size
+            f += max(chunk - b, 0) * c.flops_tok
+            mem += max(chunk - b, 0) * c.kv_tok
+        return max(mem / self.spec.hbm_bw, f / self.spec.flops)
+
+    def tick(self, t: float, dt: float) -> list[SimRequest]:
+        """Fluid engine: advance decode (and convertible prefill) by dt.
+        Returns finished requests."""
+        if not self.ready(t):
+            return []
+        finished: list[SimRequest] = []
+        if self.is_convertible and self.prefill_q and self.conv:
+            self.advance_prefill(self.conv.v_prefill * dt, t)
+        it = self.iter_time()
+        if it <= 0:
+            return finished
+        rate = dt / it                     # tokens per request this tick
+        for r in self.active:
+            r.generated += rate
+            r.decode_time += dt
+            if r.generated >= r.src.out_len:
+                r.t_finish = t + dt
+                finished.append(r)
+        self.active = [r for r in self.active if r.t_finish < 0]
+        return finished
+
+    @property
+    def idle(self) -> bool:
+        return not self.active and not self.prefill_q
+
+
+# ---------------------------------------------------------------------------
+# Metrics pipeline (§V) — shared by both engines
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SimReport:
+    name: str
+    requests: list[SimRequest]
+    gpu_seconds: float
+    duration: float
+    timeline: list[dict] = field(default_factory=list)
+    engine: str = "fluid"
+
+    # ---- SLO metrics (§V) ----
+    def slo_attainment(self) -> float:
+        ok = [1.0 if (r.ttft <= ttft_slo(r.src.in_len)
+                      and r.tpot <= TPOT_SLO) else 0.0
+              for r in self.requests if r.t_finish >= 0]
+        unfinished = sum(1 for r in self.requests if r.t_finish < 0)
+        total = len(ok) + unfinished
+        return sum(ok) / max(total, 1)
+
+    def ttft_attainment(self) -> float:
+        done = [r for r in self.requests if r.t_first_token >= 0]
+        ok = sum(1 for r in done if r.ttft <= ttft_slo(r.src.in_len))
+        return ok / max(len(self.requests), 1)
+
+    def tpot_attainment(self) -> float:
+        done = [r for r in self.requests if r.t_finish >= 0]
+        ok = sum(1 for r in done if r.tpot <= TPOT_SLO)
+        return ok / max(len(self.requests), 1)
+
+    def avg_gpus(self) -> float:
+        return self.gpu_seconds / max(self.duration, 1e-9)
+
+    def throughput(self) -> float:
+        """Finished requests per second over the horizon."""
+        done = sum(1 for r in self.requests if r.t_finish >= 0)
+        return done / max(self.duration, 1e-9)
+
+    def mean(self, what: str) -> float:
+        vals = [getattr(r, what) for r in self.requests
+                if r.t_finish >= 0 and getattr(r, what) >= 0]
+        return float(np.mean(vals)) if vals else float("nan")
+
+    def percentile(self, what: str, q: float) -> float:
+        vals = [getattr(r, what) for r in self.requests
+                if r.t_finish >= 0 and getattr(r, what) >= 0]
+        return float(np.percentile(vals, q)) if vals else float("nan")
+
+
+# ---------------------------------------------------------------------------
+# Control plane glue — shared by both engines
+# ---------------------------------------------------------------------------
+
+class ClusterBase:
+    """PD-disaggregated cluster state + the unmodified TokenScale control
+    plane.  Subclasses implement ``run`` (how time advances) and may hook
+    ``_submit_prefill_work`` / ``_after_scale`` to schedule work."""
+
+    engine = "base"
+
+    def __init__(self, cfg: ModelConfig, inst_spec: InstanceSpec,
+                 profile: VelocityProfile, policy: Policy,
+                 predictor: Optional[OutputPredictor] = None,
+                 conv_cfg: Optional[ConvertibleConfig] = None,
+                 n_convertible: int = 0,
+                 init_prefillers: int = 1, init_decoders: int = 1,
+                 dt: float = 0.025, scale_interval: float = 1.0,
+                 max_instances: int = 64):
+        self.cfg = cfg
+        self.spec = inst_spec
+        self.prof = profile
+        self.policy = policy
+        self.predictor = predictor or OutputPredictor(0.85)
+        self.cost = ModelCost.of(cfg)
+        self.router = Router(BurstDetector())
+        self.conv_cfg = conv_cfg
+        self.dt = dt
+        self.scale_interval = scale_interval
+        self.max_instances = max_instances
+        self._iid = 0
+        self.prefillers: list[Prefiller] = [
+            self._new_prefiller(0.0) for _ in range(init_prefillers)]
+        self.decoders: list[Decoder] = [
+            self._new_decoder(0.0) for _ in range(init_decoders)]
+        self.convertibles: list[Decoder] = []
+        for _ in range(n_convertible):
+            d = self._new_decoder(0.0, convertible=True)
+            self.convertibles.append(d)
+        self.pending_decode: list[tuple[float, SimRequest]] = []  # (ready_t,…)
+        self.wait_queue: list[SimRequest] = []
+        self.finished: list[SimRequest] = []
+        self.gpu_seconds = 0.0
+        self.timeline: list[dict] = []
+        # rolling 1-s gateway counters
+        self._arrivals: list[tuple[float, SimRequest]] = []
+
+    # ------------------------------------------------------------------
+    def _new_prefiller(self, ready_t: float) -> Prefiller:
+        self._iid += 1
+        return Prefiller(self._iid, self.spec, self.cost, ready_t,
+                         self.prof.v_prefill)
+
+    def _new_decoder(self, ready_t: float, convertible: bool = False) -> Decoder:
+        self._iid += 1
+        d = Decoder(self._iid, self.spec, self.cost, ready_t,
+                    conv=self.conv_cfg if convertible else None)
+        d.is_convertible = convertible
+        return d
+
+    # ------------------------------------------------------------------
+    def _submit_prefill_work(self, tgt, kind: str, req: SimRequest, t: float):
+        """Hand a routed request to its prefill target.  Engines override to
+        additionally schedule completion events."""
+        if kind == "prefiller":
+            tgt.submit(req, t)
+        else:
+            tgt.submit_prefill(req, t)
+
+    def _on_arrival(self, req: SimRequest, t: float):
+        self.router.burst.observe(t, req.src.in_len)
+        req.bucket_pred = self.predictor.predict_bucket(
+            req.src.in_len, req.src.out_len)
+        self._arrivals.append((t, req))
+        self._arrivals = [(ts, r) for ts, r in self._arrivals if t - ts <= 5.0]
+        is_ts = isinstance(self.policy, TokenScalePolicy)
+        burst = is_ts and self.convertibles and self.router.burst.is_burst(t)
+        if burst:
+            # burst traffic goes straight to the Convertible Decoders (§IV-A)
+            tgt, kind = self.router.route_prefill(
+                req.src.in_len, [], self._ready(self.convertibles, t), t)
+            if tgt is not None:
+                self._submit_prefill_work(tgt, "convertible", req, t)
+                return
+        tgt, kind = self.router.route_prefill(
+            req.src.in_len, self._ready(self.prefillers, t),
+            self._ready(self.convertibles, t) if is_ts else [], t)
+        if kind is not None:
+            self._submit_prefill_work(tgt, kind, req, t)
+        else:
+            # Alg.1 line 15: central queue, re-evaluated as load changes
+            self.wait_queue.append(req)
+
+    def _ready(self, insts, t: float):
+        return [i for i in insts if i.ready(t) and not i.draining]
+
+    def _drain_wait_queue(self, t: float):
+        """§IV-E: as load changes (scale-ups, drained convertibles), pending
+        prefill tasks are re-evaluated and re-assigned."""
+        is_ts = isinstance(self.policy, TokenScalePolicy)
+        still = []
+        for req in self.wait_queue:
+            tgt, kind = self.router.route_prefill(
+                req.src.in_len, self._ready(self.prefillers, t),
+                self._ready(self.convertibles, t) if is_ts else [], t)
+            if kind is not None:
+                self._submit_prefill_work(tgt, kind, req, t)
+            else:
+                # work conservation: an idle prefiller always takes work,
+                # even if the SLO is already forfeited
+                idle = [p for p in self._ready(self.prefillers, t) if p.idle]
+                if idle:
+                    self._submit_prefill_work(idle[0], "prefiller", req, t)
+                else:
+                    still.append(req)
+        self.wait_queue = still
+
+    def _to_network(self, req: SimRequest, t: float) -> tuple[float, SimRequest]:
+        req.t_prefill_end = t
+        delay = hw.kvc_transfer_time(self.cfg, self.spec, req.src.in_len)
+        entry = (t + delay, req)
+        self.pending_decode.append(entry)
+        return entry
+
+    def _admit_pending(self, t: float):
+        """Route KV-ready requests to decoders; on backpressure they stay
+        pending and are retried (each tick in the fluid engine; on the next
+        kv_ready/iter_done/scale event in the event engine)."""
+        rest = []
+        for ready_t, req in self.pending_decode:
+            if ready_t > t:
+                rest.append((ready_t, req))
+                continue
+            d = self.router.route_decode(
+                req.bucket_pred,
+                [x for x in self.decoders + self.convertibles
+                 if x.ready(t) and not x.draining and x.can_admit(req)])
+            if d is None:
+                rest.append((ready_t, req))
+            else:
+                req.t_kv_ready = ready_t
+                d.admit(req, t)
+                self._after_admit(d, t)
+        self.pending_decode = rest
+
+    def _after_admit(self, d: Decoder, t: float):
+        """Engine hook: the event engine wakes the decoder's iteration."""
+
+    # ------------------------------------------------------------------
+    def _observation(self, t: float) -> Observation:
+        win = [(ts, r) for ts, r in self._arrivals if t - ts <= 1.0]
+        tok_in = sum(r.src.in_len for _, r in win) / 1.0
+        by_bucket: dict[str, float] = {}
+        for _, r in win:
+            lam = r.src.in_len + _pred_out(r)
+            by_bucket[r.bucket_pred] = by_bucket.get(r.bucket_pred, 0) + lam
+        rps = len(win) / 1.0
+        queue = sum(len(p.queue) for p in self.prefillers) \
+            + len(self.wait_queue)
+        inflight = sum(len(d.active) for d in self.decoders
+                       + self.convertibles)
+        utils = [d.mem_util() for d in self.decoders if d.ready(t)]
+        return Observation(
+            t=t, token_rate_in=tok_in, token_rate_by_bucket=by_bucket,
+            rps=rps, prefill_queue=queue, decode_inflight=inflight,
+            mem_util=float(np.mean(utils)) if utils else 0.0,
+            cur_prefillers=len(self.prefillers),
+            cur_decoders=len(self.decoders))
+
+    def _scale(self, t: float):
+        obs = self._observation(t)
+        dec = self.policy.decide(obs)
+        startup = 0.0 if dec.live else self.spec.chip.startup_s
+        cap = self.max_instances
+        # prefillers
+        want_p = min(dec.prefillers, cap)
+        while len(self.prefillers) < want_p:
+            self.prefillers.append(self._new_prefiller(t + startup))
+        while len(self.prefillers) > max(want_p, 1):
+            idle = [p for p in self.prefillers if p.idle]
+            if not idle:
+                break
+            self.prefillers.remove(idle[-1])
+        # decoders (regular pool only; convertibles are fixed, §IV-C2)
+        want_d = min(dec.decoders, cap)
+        while len(self.decoders) < want_d:
+            self.decoders.append(self._new_decoder(t + startup))
+        while len(self.decoders) > max(want_d, 1):
+            idle = [d for d in self.decoders if d.idle]
+            if not idle:
+                break
+            self.decoders.remove(idle[-1])
+        self._after_scale(t)
+
+    def _after_scale(self, t: float):
+        """Engine hook: schedule wake-ups for newly provisioned instances."""
+
+    # ------------------------------------------------------------------
+    def _gpu_count(self, t: float) -> int:
+        return sum(i.spec.gpus for i in
+                   self.prefillers + self.decoders + self.convertibles
+                   if i.ready(t) or i.ready_t > 0)
+
+    def _unfinished(self):
+        out = []
+        for d in self.decoders + self.convertibles:
+            out += d.active
+            out += [r for r, _ in d.prefill_q]
+        for p in self.prefillers:
+            out += [r for r, _ in p.queue]
+        out += [r for _, r in self.pending_decode]
+        out += self.wait_queue
+        return out
+
+    def _snapshot(self, t: float) -> dict:
+        return {
+            "t": t,
+            "prefillers": len(self.prefillers),
+            "decoders": len(self.decoders),
+            "convertibles": len(self.convertibles),
+            "queue": sum(len(p.queue) for p in self.prefillers),
+            "inflight": sum(len(d.active)
+                            for d in self.decoders + self.convertibles),
+            "mem_util": float(np.mean([d.mem_util() for d in self.decoders]))
+            if self.decoders else 0.0,
+        }
+
+    def _report(self, t_end: float) -> SimReport:
+        return SimReport(self.policy.name,
+                         self.finished + self._unfinished(),
+                         self.gpu_seconds, t_end, self.timeline,
+                         engine=self.engine)
+
+
+def _pred_out(req: SimRequest) -> int:
+    return BUCKET_OUTPUT[req.bucket_pred.split("-")[1]]

@@ -11,7 +11,19 @@ from repro.core import (AIBrixPolicy, BlitzScalePolicy, DistServePolicy,
 from repro.core.hardware import CHIPS
 from repro.core.velocity import VelocityProfile
 from repro.sim.cluster import Cluster, SimReport
+from repro.sim.events import EventCluster
 from repro.sim.traces import get_trace
+
+#: engine name -> cluster class; both drive the identical control plane.
+ENGINES = {"fluid": Cluster, "events": EventCluster}
+
+
+def get_engine(name: str):
+    try:
+        return ENGINES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown engine {name!r}; expected one of {sorted(ENGINES)}")
 
 
 def make_policy(name: str, prof: VelocityProfile, n_convertible: int = 1,
@@ -49,7 +61,8 @@ def run_policy(policy_name: str, trace_name: str = "mixed",
                duration: float = 120.0, rps: float = 8.0, seed: int = 0,
                n_convertible: int = 1, predictor_accuracy: float = 0.85,
                dt: float = 0.025,
-               prof: Optional[VelocityProfile] = None) -> SimReport:
+               prof: Optional[VelocityProfile] = None,
+               engine: str = "fluid") -> SimReport:
     cfg = get_config(model)
     inst = InstanceSpec(CHIPS[chip], tp=tp)
     prof = prof or profile(cfg, inst)
@@ -62,9 +75,10 @@ def run_policy(policy_name: str, trace_name: str = "mixed",
             prof.max_batch.get("M-M", 16) // 2, 1),
         avg_ctx=1200.0, burst_ratio=0.2, max_decoders=8)
     n_conv = n_convertible if policy_name == "tokenscale" else 0
-    cl = Cluster(cfg, inst, prof, policy,
-                 predictor=OutputPredictor(predictor_accuracy, seed),
-                 conv_cfg=conv_cfg, n_convertible=n_conv, dt=dt)
+    cl = get_engine(engine)(
+        cfg, inst, prof, policy,
+        predictor=OutputPredictor(predictor_accuracy, seed),
+        conv_cfg=conv_cfg, n_convertible=n_conv, dt=dt)
     rep = cl.run(trace, duration + 30.0)
     return rep
 
@@ -72,12 +86,23 @@ def run_policy(policy_name: str, trace_name: str = "mixed",
 def compare_policies(trace_name: str = "mixed", model: str = "llama31_8b",
                      chip: str = "a100", tp: int = 1,
                      duration: float = 120.0, rps: float = 8.0,
-                     seed: int = 0) -> dict[str, SimReport]:
+                     seed: int = 0,
+                     engine: str = "fluid") -> dict[str, SimReport]:
     cfg = get_config(model)
     inst = InstanceSpec(CHIPS[chip], tp=tp)
     prof = profile(cfg, inst)
     out = {}
     for name in ["tokenscale", "distserve", "aibrix", "blitzscale"]:
         out[name] = run_policy(name, trace_name, model, chip, tp,
-                               duration, rps, seed, prof=prof)
+                               duration, rps, seed, prof=prof, engine=engine)
     return out
+
+
+def compare_engines(policy_name: str, trace_name: str = "mixed",
+                    duration: float = 60.0, rps: float = 8.0,
+                    seed: int = 0, **kw) -> dict[str, SimReport]:
+    """Differential validation helper: the same trace + policy through both
+    engines (tests/test_sim_differential.py asserts their agreement)."""
+    return {name: run_policy(policy_name, trace_name, duration=duration,
+                             rps=rps, seed=seed, engine=name, **kw)
+            for name in ENGINES}

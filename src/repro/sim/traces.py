@@ -64,12 +64,12 @@ def _lognormal(rng, mean, sigma, lo, hi, size):
     return np.clip(rng.lognormal(mu, sigma, size), lo, hi).astype(int)
 
 
-def generate(spec: TraceSpec, duration_s: float, rps: float,
-             seed: int = 0) -> list[TraceRequest]:
-    """ON/OFF modulated Poisson arrivals with lognormal lengths."""
-    rng = np.random.RandomState(seed)
-    # build the burst timeline
-    t, phases = 0.0, []                   # (start, end, multiplier)
+def burst_phases(spec: TraceSpec, duration_s: float,
+                 rng) -> list[tuple[float, float, float]]:
+    """The ON/OFF burst timeline as (start, end, rate-multiplier) phases.
+    Long-run ON duty cycle is on_mean / (on_mean + off_mean) — ~47% with
+    the paper's 2.3 s / 2.6 s constants (§I)."""
+    t, phases = 0.0, []
     while t < duration_s:
         off = rng.exponential(spec.burst_off_mean)
         on = rng.exponential(spec.burst_on_mean)
@@ -77,6 +77,14 @@ def generate(spec: TraceSpec, duration_s: float, rps: float,
         phases.append((t, t + off, 1.0))
         phases.append((t + off, t + off + on, mult))
         t += off + on
+    return phases
+
+
+def generate(spec: TraceSpec, duration_s: float, rps: float,
+             seed: int = 0) -> list[TraceRequest]:
+    """ON/OFF modulated Poisson arrivals with lognormal lengths."""
+    rng = np.random.RandomState(seed)
+    phases = burst_phases(spec, duration_s, rng)
     # thinning: draw at the max rate, accept by local multiplier
     max_mult = spec.burst_mult_hi
     base = rps / (1.0 + 0.47 * (spec.burst_mult_lo + spec.burst_mult_hi) / 2.0

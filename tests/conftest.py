@@ -5,3 +5,12 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_configure(config):
+    # Belt-and-braces marker registration so `-m "not slow"` (the pytest.ini
+    # default) works even when the suite is run from another rootdir.
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running system/bench-shaped tests "
+        "(deselected by default; run with -m slow)")

@@ -49,6 +49,7 @@ def test_forward_shapes_and_finite(arch):
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.slow
 def test_one_train_step(arch):
     cfg = get_config(arch, smoke=True)
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -70,6 +71,7 @@ def test_one_train_step(arch):
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.slow
 def test_prefill_decode_step(arch):
     cfg = get_config(arch, smoke=True)
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -88,6 +90,7 @@ def test_prefill_decode_step(arch):
 @pytest.mark.parametrize("arch", ["llama31_8b", "deepseek_v2_lite_16b",
                                   "rwkv6_3b", "jamba_v0_1_52b",
                                   "gemma2_9b", "musicgen_large"])
+@pytest.mark.slow
 def test_decode_matches_train_forward(arch):
     """KV-cache/recurrent-state decode must reproduce the full causal
     forward position by position."""

@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # JAX engine tests: minutes-scale on CPU
+
 from repro.configs import get_config
 from repro.core import CHIPS, InstanceSpec, TokenScalePolicy, profile
 from repro.models import (greedy_generate, init_params, init_state, prefill)

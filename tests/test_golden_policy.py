@@ -1,0 +1,59 @@
+"""Golden-policy regression: catches silent control-plane regressions.
+
+A short fixed-seed azure_conv burst trace is replayed through all four
+policies; TokenScale must keep its SLO lead over every baseline, and its
+emitted ``SimReport`` metrics must match stored golden values within 5%
+(both engines).  If a future PR changes control-plane behavior on purpose,
+regenerate tests/golden/tokenscale_azure_conv.json with the snippet in
+that file's git history (the values are produced by ``run_policy`` with
+the parameters recorded in the file).
+"""
+import json
+import os
+
+import pytest
+
+from repro.sim.runner import run_policy
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "tokenscale_azure_conv.json")
+GOLDEN = json.load(open(GOLDEN_PATH))
+BASELINES = ["distserve", "aibrix", "blitzscale"]
+
+
+def _run(policy, engine="fluid"):
+    return run_policy(policy, GOLDEN["trace"], duration=GOLDEN["duration"],
+                      rps=GOLDEN["rps"], seed=GOLDEN["seed"], engine=engine)
+
+
+@pytest.fixture(scope="module")
+def tokenscale_reports():
+    return {eng: _run("tokenscale", eng) for eng in GOLDEN["engines"]}
+
+
+def test_tokenscale_beats_every_baseline(tokenscale_reports):
+    ts = tokenscale_reports["fluid"].slo_attainment()
+    for name in BASELINES:
+        base = _run(name).slo_attainment()
+        assert ts >= base, (name, ts, base)
+
+
+@pytest.mark.parametrize("engine", list(GOLDEN["engines"]))
+def test_metrics_match_golden(tokenscale_reports, engine):
+    rep = tokenscale_reports[engine]
+    want = GOLDEN["engines"][engine]
+    got = {
+        "n_requests": len(rep.requests),
+        "slo_attainment": rep.slo_attainment(),
+        "ttft_attainment": rep.ttft_attainment(),
+        "tpot_attainment": rep.tpot_attainment(),
+        "avg_gpus": rep.avg_gpus(),
+        "throughput": rep.throughput(),
+        "ttft_mean": rep.mean("ttft"),
+        "tpot_mean": rep.mean("tpot"),
+        "ttft_p99": rep.percentile("ttft", 99),
+    }
+    for key, expect in want.items():
+        actual = got[key]
+        assert actual == pytest.approx(expect, rel=0.05), \
+            (engine, key, actual, expect)

@@ -17,6 +17,7 @@ def _run(args, timeout=240, env=ENV):
     return r.stdout
 
 
+@pytest.mark.slow
 def test_train_cli(tmp_path):
     out = _run(["-m", "repro.launch.train", "--arch", "qwen2-0.5b",
                 "--smoke", "--steps", "6", "--batch", "2",
@@ -28,6 +29,7 @@ def test_train_cli(tmp_path):
     assert (tmp_path / "ck" / "index.json").exists()
 
 
+@pytest.mark.slow
 def test_serve_cli():
     out = _run(["-m", "repro.launch.serve", "--arch", "llama-3.1-8b",
                 "--requests", "4", "--max-new", "4", "--chunk-size", "8"])
@@ -36,6 +38,7 @@ def test_serve_cli():
     assert rec["convertible_mode"] is True
 
 
+@pytest.mark.slow
 def test_dryrun_cli_single_pair():
     out = _run(["-m", "repro.launch.dryrun", "--arch", "qwen2_0_5b",
                 "--shape", "decode_32k"], timeout=300)

@@ -1,6 +1,7 @@
 """Hypothesis property tests on system invariants."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.convertible import burst_ratio_of_trace

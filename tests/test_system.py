@@ -34,6 +34,7 @@ def test_full_pipeline_sim():
     assert rep.avg_gpus() < 32
 
 
+@pytest.mark.slow
 def test_full_pipeline_real_engines():
     """The same control-plane concepts on real JAX engines (smoke scale):
     a convertible decoder absorbs a prompt burst without corrupting any

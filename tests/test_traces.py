@@ -1,0 +1,76 @@
+"""Trace generator coverage (§V Workload Generation, Table II ranges)."""
+import numpy as np
+
+from repro.sim.traces import (TRACES, burst_phases, generate, generate_mixed,
+                              get_trace, step_trace, varying_rate_trace)
+
+
+def test_same_seed_byte_identical():
+    a = generate(TRACES["azure_conv"], 120.0, 8.0, seed=7)
+    b = generate(TRACES["azure_conv"], 120.0, 8.0, seed=7)
+    assert [(r.rid, r.t, r.in_len, r.out_len) for r in a] \
+        == [(r.rid, r.t, r.in_len, r.out_len) for r in b]
+    c = generate(TRACES["azure_conv"], 120.0, 8.0, seed=8)
+    assert [(r.t, r.in_len) for r in a] != [(r.t, r.in_len) for r in c]
+
+
+def test_mixed_same_seed_byte_identical():
+    a = generate_mixed(60.0, 8.0, seed=3)
+    b = generate_mixed(60.0, 8.0, seed=3)
+    assert [(r.rid, r.t, r.in_len, r.out_len) for r in a] \
+        == [(r.rid, r.t, r.in_len, r.out_len) for r in b]
+
+
+def test_burst_duty_cycle_near_paper():
+    """§I: the system is in a burst ~47% of operational time (ON 2.3 s /
+    OFF 2.6 s)."""
+    spec = TRACES["azure_conv"]
+    rng = np.random.RandomState(0)
+    phases = burst_phases(spec, 20000.0, rng)
+    on = sum(e - s for s, e, m in phases if m > 1.0)
+    total = max(e for _, e, _ in phases)
+    duty = on / total
+    expect = spec.burst_on_mean / (spec.burst_on_mean + spec.burst_off_mean)
+    assert abs(expect - 0.47) < 0.01          # the constants encode §I
+    assert abs(duty - expect) < 0.05          # and the generator realizes it
+
+
+def test_lengths_clipped_to_table2_ranges():
+    for name in TRACES:
+        trace = generate(TRACES[name], 200.0, 10.0, seed=1)
+        assert trace, name
+        for r in trace:
+            assert 32 <= r.in_len <= 8192, (name, r.in_len)
+            assert 16 <= r.out_len <= 640, (name, r.out_len)
+
+
+def test_every_named_trace_generates():
+    for name in list(TRACES) + ["mixed"]:
+        trace = get_trace(name, 60.0, 8.0, seed=0)
+        assert len(trace) > 50, name
+        assert all(trace[i].t <= trace[i + 1].t
+                   for i in range(len(trace) - 1)), name
+        # rids are consecutive for the composite traces
+        if name == "mixed":
+            assert [r.rid for r in trace] == list(range(len(trace)))
+
+
+def test_rate_calibration_all_traces():
+    """Long-run average arrival rate lands near the requested rps despite
+    the ON/OFF modulation."""
+    for name in TRACES:
+        trace = generate(TRACES[name], 400.0, 10.0, seed=0)
+        rps = len(trace) / 400.0
+        assert 4.0 < rps < 25.0, (name, rps)
+
+
+def test_step_and_varying_rate_traces():
+    step = step_trace(20.0, base_rps=2.0, burst_rps=20.0, burst_start=5.0,
+                      burst_len=5.0, seed=0)
+    in_burst = sum(1 for r in step if 5.0 <= r.t < 10.0)
+    outside = sum(1 for r in step if r.t < 5.0 or r.t >= 10.0)
+    assert in_burst > outside            # 10x rate for 1/3 of the horizon
+    seg = varying_rate_trace([(10.0, 2.0), (10.0, 20.0)], seed=0)
+    assert sum(1 for r in seg if r.t >= 10.0) \
+        > 2 * sum(1 for r in seg if r.t < 10.0)
+    assert [r.rid for r in seg] == list(range(len(seg)))

@@ -59,6 +59,7 @@ def test_factored_adamw_state_shapes():
     assert opt2.v["w"][0].shape == (4, 6)
 
 
+@pytest.mark.slow
 def test_loss_drops_on_synthetic_corpus():
     cfg = get_config("gemma_2b", smoke=True)
     _, res = train(cfg, steps=25, batch=8, seq_len=64, log_every=0)
@@ -85,6 +86,7 @@ def test_checkpoint_roundtrip(tmp_path):
     np.testing.assert_array_equal(got["c"][0], tree["c"][0])
 
 
+@pytest.mark.slow
 def test_checkpoint_restores_training(tmp_path):
     cfg = get_config("qwen2_0_5b", smoke=True)
     params, res = train(cfg, steps=3, batch=2, seq_len=16, log_every=0)
@@ -96,6 +98,7 @@ def test_checkpoint_restores_training(tmp_path):
     assert max(jax.tree.leaves(d)) == 0.0
 
 
+@pytest.mark.slow
 def test_remat_preserves_loss():
     """Activation checkpointing changes memory, not math."""
     from repro.training import lm_loss
