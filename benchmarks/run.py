@@ -4,6 +4,8 @@
     PYTHONPATH=src python -m benchmarks.run fig9 fig14 # a subset
     PYTHONPATH=src python -m benchmarks.run --engine=events fig9
                                                        # event-driven engine
+    PYTHONPATH=src python -m benchmarks.run --engine=events --bench=tails
+                                 # per-priority-class p99/p999 tail rows
 
 Each benchmark prints ``name,metric,value`` CSV rows (plus section
 headers).  Simulation benches replay bursty traces through the real
@@ -453,15 +455,70 @@ def diffval():
                  1e3 * ev.percentile("ttft", 99))
 
 
+# ---------------------------------------------------------------------------
+# Tails — Fig. 9/10-style p99/p999 at event fidelity, per priority class
+# ---------------------------------------------------------------------------
+
+#: the memory-tight fleet where HBM backpressure actually bites: qwen25-32B
+#: at TP2 on A100-40G leaves ~6.5 GB of KV headroom (~27 resident requests
+#: per decoder) and the 2-instance cap keeps bursts from being absorbed by
+#: scale-out — exactly the contention regime preemption policies target.
+TAILS_CFG = dict(model="qwen25_32b", tp=2, duration=30.0, rps=8.0, seed=0,
+                 max_instances=2)
+PREEMPTION_MODES = ["none", "evict-lowest", "pause-requeue"]
+
+
+def tails():
+    """Per-priority-class tail latencies (p99/p999 TTFT, p99 TPOT) and SLO
+    attainment for every trace x policy x preemption variant, at event
+    fidelity (run with --engine=events; the fluid engine smears exactly the
+    tails this bench exists to expose, so it is skipped there — including
+    in the no-argument run-everything invocation)."""
+    from repro.sim.traces import DEFAULT_PRIORITY_MIX
+    if ENGINE != "events":
+        emit("tails", "skipped", "needs --engine=events")
+        return
+    for trace in ["azure_conv", "azure_code", "burstgpt1", "burstgpt2",
+                  "mixed"]:
+        for pol in ["tokenscale", "distserve", "aibrix", "blitzscale"]:
+            for mode in PREEMPTION_MODES:
+                rep = run_policy(pol, trace, engine=ENGINE, preemption=mode,
+                                 priority_mix=DEFAULT_PRIORITY_MIX,
+                                 **TAILS_CFG)
+                for cls in rep.priority_classes():
+                    pre = f"{trace},{pol},{mode},class{cls}"
+                    emit("tails", f"{pre},ttft_p99_ms",
+                         1e3 * rep.percentile("ttft", 99, priority=cls))
+                    emit("tails", f"{pre},ttft_p999_ms",
+                         1e3 * rep.percentile("ttft", 99.9, priority=cls))
+                    emit("tails", f"{pre},tpot_p99_ms",
+                         1e3 * rep.percentile("tpot", 99, priority=cls))
+                    emit("tails", f"{pre},slo_pct",
+                         100 * rep.slo_attainment(cls))
+                emit("tails", f"{trace},{pol},{mode},preemptions",
+                     len(rep.preemptions))
+
+
 def smoke():
     """~10 s sanity pass for scripts/check.sh: one small config through
-    both engines."""
+    both engines, plus a tails smoke row (priority classes + preemption
+    through the event engine)."""
+    from repro.sim.traces import DEFAULT_PRIORITY_MIX
     for eng in ["fluid", "events"]:
         rep = run_policy("tokenscale", "azure_conv", duration=20.0, rps=6.0,
                          seed=0, engine=eng)
         emit("smoke", f"{eng},requests", len(rep.requests))
         emit("smoke", f"{eng},slo_pct", 100 * rep.slo_attainment())
         emit("smoke", f"{eng},avg_gpus", rep.avg_gpus())
+    cfg = dict(TAILS_CFG)
+    cfg["duration"] = 22.0
+    rep = run_policy("tokenscale", "burstgpt2", engine="events",
+                     preemption="evict-lowest",
+                     priority_mix=DEFAULT_PRIORITY_MIX, **cfg)
+    emit("smoke", "tails,preemptions", len(rep.preemptions))
+    emit("smoke", "tails,class0_ttft_p99_ms",
+         1e3 * rep.percentile("ttft", 99, priority=0))
+    emit("smoke", "tails,class0_slo_pct", 100 * rep.slo_attainment(0))
 
 
 BENCHES = {
@@ -482,6 +539,7 @@ BENCHES = {
     "kv8": kv8_velocity,
     "multipod": multipod_scaling,
     "diffval": diffval,
+    "tails": tails,
     "smoke": smoke,
 }
 
@@ -493,6 +551,8 @@ def main() -> None:
         if a.startswith("--engine="):
             ENGINE = a.split("=", 1)[1]
             get_engine(ENGINE)      # fail fast on unknown engine names
+        elif a.startswith("--bench="):
+            args += [n for n in a.split("=", 1)[1].split(",") if n]
         else:
             args.append(a)
     names = args or list(BENCHES)

@@ -1,0 +1,66 @@
+"""Regenerate the golden-policy regression fixtures (tests/golden/).
+
+    PYTHONPATH=src python scripts/regen_golden.py
+
+Run this ONLY when a PR changes control-plane behavior on purpose; the
+diff of the JSON files is part of the review surface.
+"""
+import json
+import os
+
+from repro.sim.runner import run_policy
+from repro.sim.traces import DEFAULT_PRIORITY_MIX
+
+HERE = os.path.join(os.path.dirname(__file__), "..", "tests", "golden")
+
+
+def regen_tokenscale_azure_conv():
+    spec = {"trace": "azure_conv", "duration": 40.0, "rps": 8.0, "seed": 0,
+            "policy": "tokenscale"}
+    engines = {}
+    for eng in ["fluid", "events"]:
+        rep = run_policy(spec["policy"], spec["trace"],
+                         duration=spec["duration"], rps=spec["rps"],
+                         seed=spec["seed"], engine=eng)
+        engines[eng] = rep.summary()     # one schema, shared with the test
+    spec["engines"] = engines
+    return "tokenscale_azure_conv.json", spec
+
+
+def regen_priority_preemption():
+    """Per-priority-class golden on the contended tails-bench fleet."""
+    spec = {"trace": "burstgpt2", "model": "qwen25_32b", "tp": 2,
+            "duration": 30.0, "rps": 8.0, "seed": 0, "policy": "tokenscale",
+            "preemption": "evict-lowest", "max_instances": 2,
+            "priority_mix": {str(k): v
+                             for k, v in DEFAULT_PRIORITY_MIX.items()}}
+    engines = {}
+    for eng in ["fluid", "events"]:
+        rep = run_policy(
+            spec["policy"], spec["trace"], model=spec["model"],
+            tp=spec["tp"], duration=spec["duration"], rps=spec["rps"],
+            seed=spec["seed"], engine=eng, preemption=spec["preemption"],
+            max_instances=spec["max_instances"],
+            priority_mix=DEFAULT_PRIORITY_MIX)
+        engines[eng] = {
+            "n_requests": len(rep.requests),
+            "n_preemptions": len(rep.preemptions),
+            "classes": {str(c): rep.class_summary(c)
+                        for c in rep.priority_classes()},
+        }
+    spec["engines"] = engines
+    return "priority_preemption_burstgpt2.json", spec
+
+
+def main():
+    for name, spec in [regen_tokenscale_azure_conv(),
+                       regen_priority_preemption()]:
+        path = os.path.join(HERE, name)
+        with open(path, "w") as f:
+            json.dump(spec, f, indent=2)
+            f.write("\n")
+        print("wrote", os.path.normpath(path))
+
+
+if __name__ == "__main__":
+    main()

@@ -17,7 +17,8 @@ from repro.core.convertible import (  # noqa: F401
 from repro.core.hardware import CHIPS, ChipSpec, InstanceSpec  # noqa: F401
 from repro.core.predictor import OutputPredictor  # noqa: F401
 from repro.core.router import (  # noqa: F401
-    TPOT_SLO, BurstDetector, Router, ttft_slo,
+    PRIORITY_BATCH, PRIORITY_INTERACTIVE, PRIORITY_STANDARD, TPOT_SLO,
+    BurstDetector, Router, tpot_slo, ttft_slo,
 )
 from repro.core.velocity import (  # noqa: F401
     BUCKETS, VelocityProfile, bucket_lengths, bucket_of, profile,

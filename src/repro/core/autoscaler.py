@@ -59,9 +59,15 @@ class _DownHysteresis:
 
     def apply(self, key: str, cur: int, target: int, t: float) -> int:
         if target >= cur:
+            # scale-up (or hold): clear any stale countdown so the next
+            # downscale starts a fresh timer
             self._since.pop(key, None)
+            self._pending.pop(key, None)
             return target
-        if key not in self._since or self._pending.get(key, -1) < target:
+        if self._pending.get(key) != target:
+            # any *change* of the pending target — deeper or shallower —
+            # restarts the countdown: a fleet may only drop to a target
+            # that persisted for the full delay
             self._since[key] = t
             self._pending[key] = target
         if t - self._since[key] >= self.delay:

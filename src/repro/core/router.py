@@ -15,16 +15,35 @@ from dataclasses import dataclass, field
 from typing import Optional, Protocol
 
 
-def ttft_slo(in_len: int) -> float:
-    """SLO standards from §V (DynamoLLM/MLPerf): 250/400/2000 ms."""
+#: request priority classes (lower value = more urgent).  Interactive and
+#: standard traffic share the paper's SLO targets; batch traffic tolerates
+#: a relaxed multiple of them (mixed-criticality serving, DynaServe-style).
+PRIORITY_INTERACTIVE = 0
+PRIORITY_STANDARD = 1
+PRIORITY_BATCH = 2
+PRIORITY_TTFT_SCALE = {PRIORITY_INTERACTIVE: 1.0, PRIORITY_STANDARD: 1.0,
+                       PRIORITY_BATCH: 4.0}
+PRIORITY_TPOT_SCALE = {PRIORITY_INTERACTIVE: 1.0, PRIORITY_STANDARD: 1.0,
+                       PRIORITY_BATCH: 4.0}
+
+
+def ttft_slo(in_len: int, priority: int = PRIORITY_STANDARD) -> float:
+    """SLO standards from §V (DynamoLLM/MLPerf): 250/400/2000 ms, scaled
+    per priority class."""
     if in_len < 256:
-        return 0.25
-    if in_len < 1024:
-        return 0.40
-    return 2.0
+        base = 0.25
+    elif in_len < 1024:
+        base = 0.40
+    else:
+        base = 2.0
+    return base * PRIORITY_TTFT_SCALE.get(priority, 1.0)
 
 
 TPOT_SLO = 0.1
+
+
+def tpot_slo(priority: int = PRIORITY_STANDARD) -> float:
+    return TPOT_SLO * PRIORITY_TPOT_SCALE.get(priority, 1.0)
 
 
 class PrefillTarget(Protocol):
@@ -39,20 +58,41 @@ class BurstDetector:
     short_s: float = 1.0
     long_s: float = 60.0
     factor: float = 1.5
+    min_events: int = 3        # no "burst" before any baseline exists
     _events: list[tuple[float, float]] = field(default_factory=list)
 
     def observe(self, t: float, tokens: float):
         self._events.append((t, tokens))
         self._events = [e for e in self._events if t - e[0] <= self.long_s]
 
+    def _short_h(self, t: float) -> float:
+        # the short window never covers more than half the observed
+        # horizon, so the short/long comparison always measures a rate
+        # *contrast*: with both windows over the same elapsed interval the
+        # ratio would be a pure normalization artifact (always-burst before
+        # the fix's symmetric-elapsed variant, never-burst before PR 2)
+        return min(self.short_s, max(t / 2.0, 1e-3))
+
     def rates(self, t: float) -> tuple[float, float]:
-        short = sum(v for ts, v in self._events if t - ts <= self.short_s) \
-            / self.short_s
-        horizon = min(self.long_s, max(t, 1.0))
-        long = sum(v for ts, v in self._events) / horizon
+        """Both windows are normalized over their *observed* horizon, so an
+        opening spike (t < short_s) is detectable against the brief
+        baseline that preceded it; past 2x short_s this reduces to the
+        nominal short_s/elapsed normalization."""
+        short_h = self._short_h(t)
+        short = sum(v for ts, v in self._events if t - ts <= short_h) \
+            / short_h
+        long_h = min(self.long_s, max(t, 1e-3))
+        long = sum(v for ts, v in self._events) / long_h
         return short, long
 
     def is_burst(self, t: float) -> bool:
+        # a burst is a spike *above a baseline*: until a few observations
+        # exist the ratio is a one-sample artifact, never a burst signal.
+        # The count guard is on total history, not the short window — a
+        # single huge request against an established baseline IS a burst
+        # (the paper's few-requests/many-tokens case, Fig. 6 T2)
+        if len(self._events) < self.min_events:
+            return False
         short, long = self.rates(t)
         return short > self.factor * max(long, 1e-9)
 
@@ -65,10 +105,13 @@ class Router:
 
     # ---- Alg. 1 ------------------------------------------------------
     def route_prefill(self, in_len: int, prefillers: list,
-                      convertibles: list, now: float):
+                      convertibles: list, now: float,
+                      priority: int = PRIORITY_STANDARD):
         """Returns (target, kind) with kind in {"prefiller", "convertible",
-        None}; None means queue (line 15)."""
-        slo = ttft_slo(in_len)
+        None}; None means queue (line 15).  Feasibility is judged against
+        the request's per-class TTFT SLO, so batch traffic accepts busier
+        targets instead of competing for the rapid-response path."""
+        slo = ttft_slo(in_len, priority)
         for p in prefillers:                      # round 1 (lines 1-7)
             wait = p.inflight_tokens() / max(p.prefill_velocity(), 1e-9)
             if wait <= slo:

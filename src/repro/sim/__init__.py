@@ -1,11 +1,11 @@
 from repro.sim.cluster import Cluster, SimReport, SimRequest  # noqa: F401
 from repro.sim.events import EventCluster  # noqa: F401
 from repro.sim.instances import (  # noqa: F401
-    ClusterBase, Decoder, ModelCost, Prefiller,
+    ClusterBase, Decoder, ModelCost, Prefiller, PreemptionPolicy,
 )
 from repro.sim.traces import (  # noqa: F401
-    TRACES, TraceRequest, TraceSpec, generate, generate_mixed, get_trace,
-    step_trace,
+    DEFAULT_PRIORITY_MIX, PRIORITY_CLASSES, TRACES, TraceRequest, TraceSpec,
+    assign_priorities, generate, generate_mixed, get_trace, step_trace,
 )
 from repro.sim.runner import (  # noqa: F401
     ENGINES, compare_engines, compare_policies, get_engine, run_policy,

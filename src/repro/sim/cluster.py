@@ -54,6 +54,10 @@ class Cluster(ClusterBase):
             for d in self.decoders + self.convertibles:
                 self.finished += d.tick(t, self.dt)
             # ---- network -> decoder admission ----
+            # (priority-ordered; under HBM backpressure this is also where
+            # the fluid approximation of preemption fires: victims leave
+            # decode between ticks and re-enter pending_decode after their
+            # recompute/swap-in delay)
             self._admit_pending(t)
             # ---- retry queued prefills (§IV-E re-evaluation) ----
             self._drain_wait_queue(t)

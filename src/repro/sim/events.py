@@ -124,16 +124,25 @@ class EventCluster(ClusterBase):
         self._admit_pending(t)
 
     def _ev_iter_done(self, t: float, d: Decoder,
-                      batch: list[SimRequest], it: float):
+                      batch: list[tuple[SimRequest, int]], it: float):
         d._iter_pending = False
         if d not in self.decoders + self.convertibles:
             return
-        # one token per resident request for this iteration
-        for r in batch:
-            if r.t_finish >= 0:
+        # one token per resident request for this iteration; requests
+        # preempted out of the decoder mid-iteration get no token — the
+        # eviction-count stamp catches even a victim that was evicted and
+        # re-admitted to this same decoder before the iteration completed
+        resident = {id(r) for r in d.active}
+        for r, n_ev in batch:
+            if r.t_finish >= 0 or id(r) not in resident \
+                    or r.n_evictions != n_ev:
                 continue
             r.generated += 1.0
             r.decode_time += it
+            if r.t_first_token < 0:
+                # TTFT is exact: the first token exists when the first
+                # decode iteration containing the request *completes*
+                r.t_first_token = t
             if r.generated >= r.src.out_len:
                 r.t_finish = t
                 self.finished.append(r)
@@ -166,7 +175,8 @@ class EventCluster(ClusterBase):
         if d.active:
             it = d.iter_time()
             d._iter_pending = True
-            self._push(t + it, "iter_done", d, list(d.active), it)
+            self._push(t + it, "iter_done", d,
+                       [(r, r.n_evictions) for r in d.active], it)
         elif d.is_convertible and d.prefill_q and d.conv:
             # prefill-only "iteration": no decode batch to pace it, so
             # checkpoint progress at the chunk cadence
@@ -199,3 +209,8 @@ class EventCluster(ClusterBase):
     def _after_admit(self, d: Decoder, t: float):
         self._kick_decoder(d, t)           # the request joins the next
                                            # iteration boundary
+
+    def _on_requeue(self, entry):
+        # a preempted victim re-enters pending_decode; retry admission
+        # exactly when its recompute/swap-in delay elapses
+        self._push(entry[0], "kv_ready")

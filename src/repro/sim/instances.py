@@ -30,7 +30,8 @@ from repro.core.autoscaler import Observation, Policy, TokenScalePolicy
 from repro.core.convertible import ConvertibleConfig
 from repro.core.hardware import InstanceSpec
 from repro.core.predictor import OutputPredictor
-from repro.core.router import TPOT_SLO, BurstDetector, Router, ttft_slo
+from repro.core.router import (PRIORITY_STANDARD, BurstDetector, Router,
+                               tpot_slo, ttft_slo)
 from repro.core.velocity import BUCKET_OUTPUT, VelocityProfile, bucket_of
 
 
@@ -46,6 +47,11 @@ class SimRequest:
     t_finish: float = -1.0
     generated: float = 0.0
     decode_time: float = 0.0
+    n_evictions: int = 0       # times preempted out of a decoder
+
+    @property
+    def priority(self) -> int:
+        return getattr(self.src, "priority", PRIORITY_STANDARD)
 
     @property
     def ttft(self) -> float:
@@ -87,6 +93,54 @@ class ModelCost:
 _ModelCost = ModelCost
 
 
+@dataclass(frozen=True)
+class PreemptionPolicy:
+    """Decode-side HBM backpressure handling (DESIGN.md §1).
+
+      none          — KV-ready requests wait in ``pending_decode`` until a
+                      decoder frees memory (pre-PR-2 behavior);
+      evict-lowest  — the lowest-priority resident request is evicted, its
+                      KV dropped; re-admission pays a full recomputation of
+                      the context at prefill velocity;
+      pause-requeue — the victim's KV is swapped out over the interconnect
+                      and restored on re-admission (cheaper than
+                      recomputing, but still a stall).
+
+    Victims are always *strictly* lower priority than the request being
+    admitted, so high-priority work is never displaced by lower classes.
+    """
+
+    mode: str = "none"
+
+    MODES = ("none", "evict-lowest", "pause-requeue")
+
+    def __post_init__(self):
+        if self.mode not in self.MODES:
+            raise ValueError(
+                f"unknown preemption mode {self.mode!r}; "
+                f"expected one of {self.MODES}")
+
+    @property
+    def enabled(self) -> bool:
+        return self.mode != "none"
+
+    @classmethod
+    def of(cls, x) -> "PreemptionPolicy":
+        return x if isinstance(x, cls) else cls(x or "none")
+
+
+def _priority_insert(queue: list, entry: tuple):
+    """Insert a (request, remaining) entry behind the (possibly
+    in-progress) head, ahead of queued work of strictly lower priority.
+    Within a class the order stays FIFO."""
+    req = entry[0]
+    for j in range(1 if queue else 0, len(queue)):
+        if queue[j][0].priority > req.priority:
+            queue.insert(j, entry)
+            return
+    queue.append(entry)
+
+
 class Instance:
     def __init__(self, iid: int, inst: InstanceSpec, cost: ModelCost,
                  ready_t: float):
@@ -115,7 +169,7 @@ class Prefiller(Instance):
     def submit(self, req: SimRequest, t: float):
         if req.t_prefill_start < 0:
             req.t_prefill_start = t
-        self.queue.append((req, float(req.src.in_len)))
+        _priority_insert(self.queue, (req, float(req.src.in_len)))
 
     def advance(self, budget: float) -> list[SimRequest]:
         """Serialized head-of-line progress by `budget` tokens; returns
@@ -186,7 +240,7 @@ class Decoder(Instance):
     def submit_prefill(self, req: SimRequest, t: float):
         if req.t_prefill_start < 0:
             req.t_prefill_start = t
-        self.prefill_q.append((req, float(req.src.in_len)))
+        _priority_insert(self.prefill_q, (req, float(req.src.in_len)))
 
     def advance_prefill(self, budget: float, t: float) -> list[SimRequest]:
         """Restricted-velocity convertible prefill (Eq. 5); completed
@@ -210,9 +264,12 @@ class Decoder(Instance):
 
     # ---- decode ----
     def admit(self, req: SimRequest, t: float):
-        req.t_decode_start = t
-        if req.t_first_token < 0:
-            req.t_first_token = t     # first decode iteration emits token 1
+        # t_decode_start survives preemption round-trips; t_first_token is
+        # stamped by the engines when the first decode iteration *completes*
+        # (end of first iter_done / first tick), not at admission — stamping
+        # here would make TTFT one full iteration optimistic
+        if req.t_decode_start < 0:
+            req.t_decode_start = t
         self.active.append(req)
 
     def iter_time(self) -> float:
@@ -233,7 +290,10 @@ class Decoder(Instance):
 
     def tick(self, t: float, dt: float) -> list[SimRequest]:
         """Fluid engine: advance decode (and convertible prefill) by dt.
-        Returns finished requests."""
+        Returns finished requests.  ``generated`` is clamped at ``out_len``
+        (no memory-accounting overshoot) and the final tick is prorated, so
+        a request finishing mid-tick is billed only the fraction of the
+        tick it actually decoded."""
         if not self.ready(t):
             return []
         finished: list[SimRequest] = []
@@ -244,10 +304,17 @@ class Decoder(Instance):
             return finished
         rate = dt / it                     # tokens per request this tick
         for r in self.active:
-            r.generated += rate
-            r.decode_time += dt
-            if r.generated >= r.src.out_len:
-                r.t_finish = t + dt
+            remaining = max(r.src.out_len - r.generated, 0.0)
+            take = min(rate, remaining)
+            frac = take / rate if rate > 0 else 0.0
+            r.generated += take
+            r.decode_time += dt * frac
+            if r.t_first_token < 0 and r.generated >= 1.0 - 1e-9:
+                # end of the tick in which the first token completed
+                r.t_first_token = t + dt * frac
+            if remaining - take <= 1e-9:
+                r.generated = float(r.src.out_len)
+                r.t_finish = t + dt * frac
                 finished.append(r)
         self.active = [r for r in self.active if r.t_finish < 0]
         return finished
@@ -269,25 +336,42 @@ class SimReport:
     duration: float
     timeline: list[dict] = field(default_factory=list)
     engine: str = "fluid"
+    # (t, victim_priority, preemptor_priority, victim_generated) rows
+    preemptions: list[tuple] = field(default_factory=list)
 
     # ---- SLO metrics (§V) ----
-    def slo_attainment(self) -> float:
-        ok = [1.0 if (r.ttft <= ttft_slo(r.src.in_len)
-                      and r.tpot <= TPOT_SLO) else 0.0
-              for r in self.requests if r.t_finish >= 0]
-        unfinished = sum(1 for r in self.requests if r.t_finish < 0)
+    # Every metric optionally restricts to one priority class; SLO targets
+    # are per-class (core.router.ttft_slo / tpot_slo).
+
+    def _pool(self, priority: Optional[int] = None) -> list[SimRequest]:
+        if priority is None:
+            return self.requests
+        return [r for r in self.requests if r.priority == priority]
+
+    def priority_classes(self) -> list[int]:
+        return sorted({r.priority for r in self.requests})
+
+    def slo_attainment(self, priority: Optional[int] = None) -> float:
+        reqs = self._pool(priority)
+        ok = [1.0 if (r.ttft <= ttft_slo(r.src.in_len, r.priority)
+                      and r.tpot <= tpot_slo(r.priority)) else 0.0
+              for r in reqs if r.t_finish >= 0]
+        unfinished = sum(1 for r in reqs if r.t_finish < 0)
         total = len(ok) + unfinished
         return sum(ok) / max(total, 1)
 
-    def ttft_attainment(self) -> float:
-        done = [r for r in self.requests if r.t_first_token >= 0]
-        ok = sum(1 for r in done if r.ttft <= ttft_slo(r.src.in_len))
-        return ok / max(len(self.requests), 1)
+    def ttft_attainment(self, priority: Optional[int] = None) -> float:
+        reqs = self._pool(priority)
+        done = [r for r in reqs if r.t_first_token >= 0]
+        ok = sum(1 for r in done
+                 if r.ttft <= ttft_slo(r.src.in_len, r.priority))
+        return ok / max(len(reqs), 1)
 
-    def tpot_attainment(self) -> float:
-        done = [r for r in self.requests if r.t_finish >= 0]
-        ok = sum(1 for r in done if r.tpot <= TPOT_SLO)
-        return ok / max(len(self.requests), 1)
+    def tpot_attainment(self, priority: Optional[int] = None) -> float:
+        reqs = self._pool(priority)
+        done = [r for r in reqs if r.t_finish >= 0]
+        ok = sum(1 for r in done if r.tpot <= tpot_slo(r.priority))
+        return ok / max(len(reqs), 1)
 
     def avg_gpus(self) -> float:
         return self.gpu_seconds / max(self.duration, 1e-9)
@@ -297,15 +381,39 @@ class SimReport:
         done = sum(1 for r in self.requests if r.t_finish >= 0)
         return done / max(self.duration, 1e-9)
 
-    def mean(self, what: str) -> float:
-        vals = [getattr(r, what) for r in self.requests
+    def mean(self, what: str, priority: Optional[int] = None) -> float:
+        vals = [getattr(r, what) for r in self._pool(priority)
                 if r.t_finish >= 0 and getattr(r, what) >= 0]
         return float(np.mean(vals)) if vals else float("nan")
 
-    def percentile(self, what: str, q: float) -> float:
-        vals = [getattr(r, what) for r in self.requests
+    def percentile(self, what: str, q: float,
+                   priority: Optional[int] = None) -> float:
+        vals = [getattr(r, what) for r in self._pool(priority)
                 if r.t_finish >= 0 and getattr(r, what) >= 0]
         return float(np.percentile(vals, q)) if vals else float("nan")
+
+    # ---- canonical metric schemas (golden fixtures + regen share these,
+    # so the regenerator and the regression test can never drift apart) --
+    def summary(self) -> dict:
+        return {
+            "n_requests": len(self.requests),
+            "slo_attainment": self.slo_attainment(),
+            "ttft_attainment": self.ttft_attainment(),
+            "tpot_attainment": self.tpot_attainment(),
+            "avg_gpus": self.avg_gpus(),
+            "throughput": self.throughput(),
+            "ttft_mean": self.mean("ttft"),
+            "tpot_mean": self.mean("tpot"),
+            "ttft_p99": self.percentile("ttft", 99),
+        }
+
+    def class_summary(self, priority: int) -> dict:
+        return {
+            "n": len(self._pool(priority)),
+            "slo_attainment": self.slo_attainment(priority),
+            "ttft_p99": self.percentile("ttft", 99, priority=priority),
+            "tpot_p99": self.percentile("tpot", 99, priority=priority),
+        }
 
 
 # ---------------------------------------------------------------------------
@@ -326,7 +434,8 @@ class ClusterBase:
                  n_convertible: int = 0,
                  init_prefillers: int = 1, init_decoders: int = 1,
                  dt: float = 0.025, scale_interval: float = 1.0,
-                 max_instances: int = 64):
+                 max_instances: int = 64,
+                 preemption: "PreemptionPolicy | str" = "none"):
         self.cfg = cfg
         self.spec = inst_spec
         self.prof = profile
@@ -335,6 +444,10 @@ class ClusterBase:
         self.cost = ModelCost.of(cfg)
         self.router = Router(BurstDetector())
         self.conv_cfg = conv_cfg
+        self.preemption = PreemptionPolicy.of(preemption)
+        # (t, victim_priority, preemptor_priority, victim_generated) audit
+        # trail — the preemption property tests assert over it
+        self.preemption_log: list[tuple[float, int, int, float]] = []
         self.dt = dt
         self.scale_interval = scale_interval
         self.max_instances = max_instances
@@ -388,13 +501,15 @@ class ClusterBase:
         if burst:
             # burst traffic goes straight to the Convertible Decoders (§IV-A)
             tgt, kind = self.router.route_prefill(
-                req.src.in_len, [], self._ready(self.convertibles, t), t)
+                req.src.in_len, [], self._ready(self.convertibles, t), t,
+                priority=req.priority)
             if tgt is not None:
                 self._submit_prefill_work(tgt, "convertible", req, t)
                 return
         tgt, kind = self.router.route_prefill(
             req.src.in_len, self._ready(self.prefillers, t),
-            self._ready(self.convertibles, t) if is_ts else [], t)
+            self._ready(self.convertibles, t) if is_ts else [], t,
+            priority=req.priority)
         if kind is not None:
             self._submit_prefill_work(tgt, kind, req, t)
         else:
@@ -406,13 +521,16 @@ class ClusterBase:
 
     def _drain_wait_queue(self, t: float):
         """§IV-E: as load changes (scale-ups, drained convertibles), pending
-        prefill tasks are re-evaluated and re-assigned."""
+        prefill tasks are re-evaluated and re-assigned — higher priority
+        classes first, FIFO within a class."""
         is_ts = isinstance(self.policy, TokenScalePolicy)
         still = []
-        for req in self.wait_queue:
+        for req in sorted(self.wait_queue,
+                          key=lambda r: (r.priority, r.src.t, r.src.rid)):
             tgt, kind = self.router.route_prefill(
                 req.src.in_len, self._ready(self.prefillers, t),
-                self._ready(self.convertibles, t) if is_ts else [], t)
+                self._ready(self.convertibles, t) if is_ts else [], t,
+                priority=req.priority)
             if kind is not None:
                 self._submit_prefill_work(tgt, kind, req, t)
             else:
@@ -433,11 +551,18 @@ class ClusterBase:
         return entry
 
     def _admit_pending(self, t: float):
-        """Route KV-ready requests to decoders; on backpressure they stay
-        pending and are retried (each tick in the fluid engine; on the next
-        kv_ready/iter_done/scale event in the event engine)."""
+        """Route KV-ready requests to decoders in priority order; on
+        backpressure they stay pending and are retried (each tick in the
+        fluid engine; on the next kv_ready/iter_done/scale event in the
+        event engine).  If preemption is enabled, a request that fits
+        nowhere may instead evict/pause strictly-lower-priority resident
+        work (the fluid engine reaches this via its per-tick retry; the
+        event engine via exact admission events)."""
         rest = []
-        for ready_t, req in self.pending_decode:
+        queue = sorted(self.pending_decode,
+                       key=lambda e: (e[1].priority, e[0], e[1].src.rid))
+        self.pending_decode = []      # evicted victims re-enter here
+        for ready_t, req in queue:
             if ready_t > t:
                 rest.append((ready_t, req))
                 continue
@@ -445,16 +570,81 @@ class ClusterBase:
                 req.bucket_pred,
                 [x for x in self.decoders + self.convertibles
                  if x.ready(t) and not x.draining and x.can_admit(req)])
+            if d is None and self.preemption.enabled:
+                d = self._preempt_for(req, t)
             if d is None:
                 rest.append((ready_t, req))
             else:
-                req.t_kv_ready = ready_t
+                if req.t_kv_ready < 0:     # keep the first KV-ready stamp
+                    req.t_kv_ready = ready_t   # across preemption re-entries
                 d.admit(req, t)
                 self._after_admit(d, t)
-        self.pending_decode = rest
+        self.pending_decode = rest + self.pending_decode
 
     def _after_admit(self, d: Decoder, t: float):
         """Engine hook: the event engine wakes the decoder's iteration."""
+
+    # ---- preemption (tentpole; DESIGN.md §1) -------------------------
+    def _preempt_for(self, req: SimRequest, t: float) -> Optional[Decoder]:
+        """HBM backpressure: free memory for ``req`` by preempting
+        strictly-lower-priority resident requests.  Returns the decoder
+        that can now admit ``req``, or None if no eligible victims exist.
+        Host choice: the decoder whose most-expendable victim has the
+        lowest class; victims are evicted lowest-class-first and
+        least-progress-first (least wasted work)."""
+        c = self.cost
+        need = (req.src.in_len + req.src.out_len) * c.kv_tok + c.state_fix
+        best, best_key = None, None
+        for d in self.decoders + self.convertibles:
+            if not d.ready(t) or d.draining:
+                continue
+            victims = [v for v in d.active
+                       if v.t_finish < 0 and v.priority > req.priority]
+            if not victims:
+                continue
+            free = d.mem_cap() - d.mem_used()
+            evictable = sum((v.src.in_len + v.generated) * c.kv_tok
+                            + c.state_fix for v in victims)
+            if free + evictable < need:
+                continue
+            key = (max(v.priority for v in victims), free + evictable)
+            if best_key is None or key > best_key:
+                best, best_key = d, key
+        if best is None:
+            return None
+        victims = sorted(
+            (v for v in best.active
+             if v.t_finish < 0 and v.priority > req.priority),
+            key=lambda v: (-v.priority, v.generated, v.t_decode_start))
+        for v in victims:
+            if best.can_admit(req):
+                break
+            self._evict(best, v, req, t)
+        return best if best.can_admit(req) else None
+
+    def _evict(self, d: Decoder, victim: SimRequest, preemptor: SimRequest,
+               t: float):
+        """Remove ``victim`` from decode; it re-enters ``pending_decode``
+        after its KV recomputation (evict-lowest) or swap-in
+        (pause-requeue) delay, which is also charged to its decode time."""
+        d.active.remove(victim)
+        victim.n_evictions += 1
+        ctx = int(victim.src.in_len + victim.generated)
+        if self.preemption.mode == "pause-requeue":
+            # KV swapped out; restored over the interconnect
+            delay = hw.kvc_transfer_time(self.cfg, self.spec, ctx)
+        else:                                # evict-lowest: KV dropped,
+            delay = ctx / max(self.prof.v_prefill, 1e-9)  # full recompute
+        victim.decode_time += delay
+        self.preemption_log.append(
+            (t, victim.priority, preemptor.priority, victim.generated))
+        entry = (t + delay, victim)
+        self.pending_decode.append(entry)
+        self._on_requeue(entry)
+
+    def _on_requeue(self, entry: tuple[float, SimRequest]):
+        """Engine hook: the event engine schedules a retry at the victim's
+        re-entry ready time."""
 
     # ------------------------------------------------------------------
     def _observation(self, t: float) -> Observation:
@@ -507,9 +697,12 @@ class ClusterBase:
 
     # ------------------------------------------------------------------
     def _gpu_count(self, t: float) -> int:
+        """Billing: every *provisioned* instance — booting or ready — burns
+        GPUs; instances removed by scale-down stop billing because they
+        leave the fleet lists."""
+        del t
         return sum(i.spec.gpus for i in
-                   self.prefillers + self.decoders + self.convertibles
-                   if i.ready(t) or i.ready_t > 0)
+                   self.prefillers + self.decoders + self.convertibles)
 
     def _unfinished(self):
         out = []
@@ -539,7 +732,8 @@ class ClusterBase:
         return SimReport(self.policy.name,
                          self.finished + self._unfinished(),
                          self.gpu_seconds, t_end, self.timeline,
-                         engine=self.engine)
+                         engine=self.engine,
+                         preemptions=list(self.preemption_log))
 
 
 def _pred_out(req: SimRequest) -> int:

@@ -62,11 +62,15 @@ def run_policy(policy_name: str, trace_name: str = "mixed",
                n_convertible: int = 1, predictor_accuracy: float = 0.85,
                dt: float = 0.025,
                prof: Optional[VelocityProfile] = None,
-               engine: str = "fluid") -> SimReport:
+               engine: str = "fluid",
+               preemption: str = "none",
+               priority_mix: Optional[dict] = None,
+               max_instances: int = 64) -> SimReport:
     cfg = get_config(model)
     inst = InstanceSpec(CHIPS[chip], tp=tp)
     prof = prof or profile(cfg, inst)
-    trace = get_trace(trace_name, duration, rps, seed)
+    trace = get_trace(trace_name, duration, rps, seed,
+                      priority_mix=priority_mix)
     mean_in = (sum(r.in_len for r in trace) / max(len(trace), 1)) or 1024.0
     mean_out = (sum(r.out_len for r in trace) / max(len(trace), 1)) or 240.0
     policy = make_policy(policy_name, prof, n_convertible, mean_in, mean_out)
@@ -78,7 +82,8 @@ def run_policy(policy_name: str, trace_name: str = "mixed",
     cl = get_engine(engine)(
         cfg, inst, prof, policy,
         predictor=OutputPredictor(predictor_accuracy, seed),
-        conv_cfg=conv_cfg, n_convertible=n_conv, dt=dt)
+        conv_cfg=conv_cfg, n_convertible=n_conv, dt=dt,
+        preemption=preemption, max_instances=max_instances)
     rep = cl.run(trace, duration + 30.0)
     return rep
 

@@ -23,12 +23,20 @@ from typing import Iterator
 import numpy as np
 
 
+#: priority classes (lower = more urgent); canonical scales live in
+#: core.router.  The default mix models a mixed-criticality production
+#: tenant: a latency-critical slice, a standard bulk, and batch traffic.
+PRIORITY_CLASSES = {"interactive": 0, "standard": 1, "batch": 2}
+DEFAULT_PRIORITY_MIX = {0: 0.2, 1: 0.6, 2: 0.2}
+
+
 @dataclass
 class TraceRequest:
     rid: int
     t: float
     in_len: int
     out_len: int
+    priority: int = 1          # PRIORITY_CLASSES["standard"]
 
 
 @dataclass(frozen=True)
@@ -64,6 +72,24 @@ def _lognormal(rng, mean, sigma, lo, hi, size):
     return np.clip(rng.lognormal(mu, sigma, size), lo, hi).astype(int)
 
 
+def assign_priorities(reqs: list[TraceRequest],
+                      priority_mix: dict[int, float] | None,
+                      seed: int = 0) -> list[TraceRequest]:
+    """Draw per-request priority classes in place.  The draw uses an
+    *independent* RNG stream, so adding a mix never perturbs the arrival
+    times or lengths of an existing seeded trace."""
+    if not priority_mix:
+        return reqs
+    classes = sorted(priority_mix)
+    w = np.array([priority_mix[c] for c in classes], dtype=float)
+    w /= w.sum()
+    rng = np.random.RandomState((seed + 104729) % (2 ** 31))
+    draws = rng.choice(len(classes), size=len(reqs), p=w)
+    for r, k in zip(reqs, draws):
+        r.priority = int(classes[k])
+    return reqs
+
+
 def burst_phases(spec: TraceSpec, duration_s: float,
                  rng) -> list[tuple[float, float, float]]:
     """The ON/OFF burst timeline as (start, end, rate-multiplier) phases.
@@ -81,7 +107,9 @@ def burst_phases(spec: TraceSpec, duration_s: float,
 
 
 def generate(spec: TraceSpec, duration_s: float, rps: float,
-             seed: int = 0) -> list[TraceRequest]:
+             seed: int = 0,
+             priority_mix: dict[int, float] | None = None
+             ) -> list[TraceRequest]:
     """ON/OFF modulated Poisson arrivals with lognormal lengths."""
     rng = np.random.RandomState(seed)
     phases = burst_phases(spec, duration_s, rng)
@@ -101,17 +129,20 @@ def generate(spec: TraceSpec, duration_s: float, rps: float,
     n = len(times)
     ins = _lognormal(rng, spec.in_mean, spec.in_sigma, 32, 8192, n)
     outs = _lognormal(rng, spec.out_mean, spec.out_sigma, 16, 640, n)
-    return [TraceRequest(i, float(times[i]), int(ins[i]), int(outs[i]))
+    reqs = [TraceRequest(i, float(times[i]), int(ins[i]), int(outs[i]))
             for i in range(n)]
+    return assign_priorities(reqs, priority_mix, seed)
 
 
-def generate_mixed(duration_s: float, rps: float,
-                   seed: int = 0) -> list[TraceRequest]:
+def generate_mixed(duration_s: float, rps: float, seed: int = 0,
+                   priority_mix: dict[int, float] | None = None
+                   ) -> list[TraceRequest]:
     """The paper's Mixed trace: conv + code + BurstGPT 1/2 at equal rates."""
     parts = []
     for i, name in enumerate(["azure_conv", "azure_code",
                               "burstgpt1", "burstgpt2"]):
-        parts += generate(TRACES[name], duration_s, rps / 4.0, seed + i)
+        parts += generate(TRACES[name], duration_s, rps / 4.0, seed + i,
+                          priority_mix=priority_mix)
     parts.sort(key=lambda r: r.t)
     for i, r in enumerate(parts):
         r.rid = i
@@ -119,15 +150,19 @@ def generate_mixed(duration_s: float, rps: float,
 
 
 def get_trace(name: str, duration_s: float = 120.0, rps: float = 8.0,
-              seed: int = 0) -> list[TraceRequest]:
+              seed: int = 0,
+              priority_mix: dict[int, float] | None = None
+              ) -> list[TraceRequest]:
     if name == "mixed":
-        return generate_mixed(duration_s, rps, seed)
-    return generate(TRACES[name], duration_s, rps, seed)
+        return generate_mixed(duration_s, rps, seed, priority_mix)
+    return generate(TRACES[name], duration_s, rps, seed, priority_mix)
 
 
 def varying_rate_trace(segments: list[tuple[float, float]],
                        spec: TraceSpec = TRACES["azure_conv"],
-                       seed: int = 0) -> list[TraceRequest]:
+                       seed: int = 0,
+                       priority_mix: dict[int, float] | None = None
+                       ) -> list[TraceRequest]:
     """Piecewise-rate workload (large-scale load swings; used by the
     provisioned-vs-required correlation study, Fig. 11)."""
     out: list[TraceRequest] = []
@@ -141,13 +176,15 @@ def varying_rate_trace(segments: list[tuple[float, float]],
     out.sort(key=lambda r: r.t)
     for i, r in enumerate(out):
         r.rid = i
-    return out
+    return assign_priorities(out, priority_mix, seed)
 
 
 def step_trace(duration_s: float, base_rps: float, burst_rps: float,
                burst_start: float, burst_len: float,
                spec: TraceSpec = TRACES["azure_conv"],
-               seed: int = 0) -> list[TraceRequest]:
+               seed: int = 0,
+               priority_mix: dict[int, float] | None = None
+               ) -> list[TraceRequest]:
     """Deterministic-rate step trace (Fig. 10: 1 -> 10 RPS at t=10 s)."""
     rng = np.random.RandomState(seed)
     reqs, t, rid = [], 0.0, 0
@@ -163,4 +200,4 @@ def step_trace(duration_s: float, base_rps: float, burst_rps: float,
                                  16, 640, 1)[0])
         reqs.append(TraceRequest(rid, t, in_len, out_len))
         rid += 1
-    return reqs
+    return assign_priorities(reqs, priority_mix, seed)

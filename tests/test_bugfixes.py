@@ -1,0 +1,213 @@
+"""Unit tests pinning the PR-2 satellite bugfixes.
+
+One test (cluster) per fixed defect:
+  1. event/fluid first-token stamping (TTFT no longer one iteration
+     optimistic) — see also the tightened causality checks in
+     tests/test_sim_differential.py;
+  2. scale-down hysteresis timer resets when the pending target changes;
+  3. fluid decode tick clamps ``generated`` at ``out_len`` and prorates
+     the final tick;
+  4. burst detector normalizes both windows over their observed horizon,
+     so an opening spike (t < 1 s) is detectable;
+  5. ``_gpu_count`` bills exactly the provisioned fleet (booting + ready).
+"""
+import pytest
+
+from repro.configs import get_config
+from repro.core import CHIPS, InstanceSpec, TokenScalePolicy, profile
+from repro.core.autoscaler import _DownHysteresis
+from repro.core.router import BurstDetector
+from repro.sim.cluster import Cluster
+from repro.sim.events import EventCluster
+from repro.sim.instances import Decoder, ModelCost, SimRequest
+from repro.sim.runner import run_policy
+from repro.sim.traces import TraceRequest
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("llama31_8b")
+
+
+@pytest.fixture(scope="module")
+def inst():
+    return InstanceSpec(CHIPS["a100"], 1)
+
+
+@pytest.fixture(scope="module")
+def prof(cfg, inst):
+    return profile(cfg, inst)
+
+
+# ---------------------------------------------------------------------------
+# 1. first-token stamping
+# ---------------------------------------------------------------------------
+
+def test_admit_does_not_stamp_first_token(cfg, inst):
+    d = Decoder(1, inst, ModelCost.of(cfg), 0.0)
+    r = SimRequest(TraceRequest(0, 0.0, 128, 32))
+    d.admit(r, 1.0)
+    assert r.t_decode_start == 1.0
+    assert r.t_first_token < 0          # token 1 needs an iteration first
+
+
+def test_event_first_token_lands_after_one_iteration():
+    rep = run_policy("tokenscale", "azure_conv", duration=25.0, rps=6.0,
+                     seed=0, engine="events")
+    done = [r for r in rep.requests if r.t_first_token >= 0]
+    assert done
+    for r in done:
+        # strictly after admission: the first decode iteration takes time
+        assert r.t_first_token > r.t_decode_start
+        assert r.t_first_token > r.t_kv_ready
+
+
+def test_fluid_first_token_lands_after_admission():
+    rep = run_policy("tokenscale", "azure_conv", duration=25.0, rps=6.0,
+                     seed=0, engine="fluid")
+    done = [r for r in rep.requests if r.t_first_token >= 0]
+    assert done
+    for r in done:
+        assert r.t_first_token > r.t_decode_start
+
+
+def test_readmission_preserves_first_stamps(cfg, inst):
+    """Preemption round-trips must not reset decode-start/KV-ready."""
+    d = Decoder(1, inst, ModelCost.of(cfg), 0.0)
+    r = SimRequest(TraceRequest(0, 0.0, 128, 32))
+    d.admit(r, 1.0)
+    d.active.remove(r)
+    d.admit(r, 9.0)
+    assert r.t_decode_start == 1.0
+
+
+# ---------------------------------------------------------------------------
+# 2. down-scale hysteresis
+# ---------------------------------------------------------------------------
+
+def test_hysteresis_deeper_target_restarts_countdown():
+    h = _DownHysteresis(delay=5.0)
+    assert h.apply("d", 5, 5, 0.0) == 5
+    assert h.apply("d", 5, 4, 1.0) == 5       # pending 4 since t=1
+    assert h.apply("d", 5, 2, 3.0) == 5       # deeper target: timer resets
+    # pre-fix the countdown inherited t=1 and released the deeper target at
+    # t=6; it must persist from t=3 for the full delay
+    assert h.apply("d", 5, 2, 7.0) == 5
+    assert h.apply("d", 5, 2, 8.5) == 2       # 8.5 - 3.0 >= 5
+
+
+def test_hysteresis_scale_up_clears_stale_pending():
+    h = _DownHysteresis(delay=5.0)
+    h.apply("d", 5, 3, 0.0)
+    assert h.apply("d", 5, 6, 1.0) == 6       # scale-up clears the timer
+    assert h.apply("d", 6, 3, 2.0) == 6       # fresh countdown from t=2
+    assert h.apply("d", 6, 3, 6.9) == 6
+    assert h.apply("d", 6, 3, 7.1) == 3
+
+
+def test_hysteresis_shallower_target_also_restarts():
+    h = _DownHysteresis(delay=5.0)
+    assert h.apply("p", 5, 2, 0.0) == 5
+    assert h.apply("p", 5, 4, 4.0) == 5       # target changed: reset at t=4
+    assert h.apply("p", 5, 4, 8.0) == 5       # 8 - 4 < 5
+    assert h.apply("p", 5, 4, 9.5) == 4
+
+
+# ---------------------------------------------------------------------------
+# 3. fluid decode tick: clamp + prorate
+# ---------------------------------------------------------------------------
+
+def test_fluid_tick_clamps_generated_and_prorates_final_tick(cfg, inst):
+    d = Decoder(1, inst, ModelCost.of(cfg), 0.0)
+    r = SimRequest(TraceRequest(0, 0.0, 128, 16))
+    d.admit(r, 0.0)
+    it = d.iter_time()
+    dt = it * 20.0                      # one tick covers 20 tokens of work
+    finished = d.tick(0.0, dt)
+    assert finished == [r]
+    assert r.generated == 16.0          # clamped, no overshoot
+    # only 16/20 of the tick was spent decoding
+    assert r.decode_time == pytest.approx(16.0 * it)
+    assert r.t_finish == pytest.approx(0.8 * dt)
+    assert r.tpot == pytest.approx(it, rel=1e-6)
+
+
+def test_fluid_mem_never_counts_overshoot(cfg, inst):
+    d = Decoder(1, inst, ModelCost.of(cfg), 0.0)
+    r1 = SimRequest(TraceRequest(0, 0.0, 128, 16))
+    r2 = SimRequest(TraceRequest(1, 0.0, 128, 640))
+    d.admit(r1, 0.0)
+    d.admit(r2, 0.0)
+    it = d.iter_time()
+    d.tick(0.0, it * 100.0)             # r1 finishes long before tick end
+    c = d.cost
+    # r2 is the only resident; its generated tokens are clamped at <= 100
+    assert d.mem_used() <= (r2.src.in_len + 100.0) * c.kv_tok \
+        + c.state_fix + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# 4. burst detector: opening-spike normalization
+# ---------------------------------------------------------------------------
+
+def test_burst_detected_in_first_second():
+    """A spike against a brief baseline, all inside the first second."""
+    b = BurstDetector()                 # short 1 s / long 60 s / factor 1.5
+    b.observe(0.05, 100.0)              # baseline trickle
+    for i in range(6):                  # 6 requests slam in at ~0.45-0.5 s
+        b.observe(0.45 + 0.01 * i, 200.0)
+    short, long = b.rates(0.5)
+    assert short > 1.5 * long
+    assert b.is_burst(0.5)
+
+
+def test_steady_traffic_is_not_a_burst():
+    b = BurstDetector()
+    for i in range(120):
+        b.observe(0.5 * i, 100.0)
+    assert not b.is_burst(59.9)
+
+
+def test_opening_trickle_is_not_a_burst():
+    """Cold-start traffic with no rate contrast must not be flagged: not a
+    lone first arrival, and not a steady opening stream (the symmetric-
+    elapsed normalization degenerated to always-burst for t < ~0.67 s)."""
+    b = BurstDetector()
+    b.observe(0.3, 500.0)
+    assert not b.is_burst(0.3)          # single arrival
+    b2 = BurstDetector()
+    for i in range(8):                  # steady 10 rps from t=0
+        b2.observe(0.1 * (i + 1), 100.0)
+    assert not b2.is_burst(0.8)
+
+
+def test_burst_definition_unchanged_at_steady_state():
+    """Past the long horizon the fix is a no-op: spikes still register,
+    constant load still does not."""
+    b = BurstDetector()
+    for i in range(600):
+        b.observe(0.1 * i, 10.0)        # 100 tok/s for 60 s
+    b.observe(60.05, 500.0)             # 5x spike in the short window
+    assert b.is_burst(60.1)
+
+
+# ---------------------------------------------------------------------------
+# 5. GPU-second billing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine_cls", [Cluster, EventCluster])
+def test_gpu_seconds_integrate_fleet_exactly(engine_cls, cfg, inst, prof):
+    cl = engine_cls(cfg, inst, prof, TokenScalePolicy(prof, convertible=0),
+                    n_convertible=0, init_prefillers=1, init_decoders=1)
+    rep = cl.run([], duration=10.0)
+    # no traffic -> the fleet stays at 1 prefiller + 1 decoder throughout
+    assert rep.gpu_seconds == pytest.approx(2 * inst.gpus * 10.0, rel=0.01)
+
+
+def test_booting_instances_are_billed(cfg, inst, prof):
+    cl = Cluster(cfg, inst, prof, TokenScalePolicy(prof, convertible=0),
+                 n_convertible=0, init_prefillers=1, init_decoders=1)
+    cl.decoders.append(cl._new_decoder(ready_t=5.0))   # boots until t=5
+    assert cl._gpu_count(0.0) == 3 * inst.gpus         # booting is billed
+    cl.decoders.pop()
+    assert cl._gpu_count(0.0) == 2 * inst.gpus         # removed is not

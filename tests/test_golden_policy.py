@@ -1,12 +1,17 @@
 """Golden-policy regression: catches silent control-plane regressions.
 
-A short fixed-seed azure_conv burst trace is replayed through all four
-policies; TokenScale must keep its SLO lead over every baseline, and its
-emitted ``SimReport`` metrics must match stored golden values within 5%
-(both engines).  If a future PR changes control-plane behavior on purpose,
-regenerate tests/golden/tokenscale_azure_conv.json with the snippet in
-that file's git history (the values are produced by ``run_policy`` with
-the parameters recorded in the file).
+Two fixed-seed fixtures are replayed through both engines and must match
+stored golden values within 5%:
+
+  * ``tokenscale_azure_conv.json`` — a short azure_conv burst trace;
+    TokenScale must also keep its SLO lead over every baseline;
+  * ``priority_preemption_burstgpt2.json`` — the contended tails-bench
+    fleet (qwen25-32B TP2, 2-instance cap, evict-lowest) with per-
+    priority-class attainment and p99 tails.
+
+If a future PR changes control-plane behavior on purpose, regenerate both
+with ``PYTHONPATH=src python scripts/regen_golden.py`` and review the
+JSON diff.
 """
 import json
 import os
@@ -14,10 +19,13 @@ import os
 import pytest
 
 from repro.sim.runner import run_policy
+from repro.sim.traces import DEFAULT_PRIORITY_MIX
 
-GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
-                           "tokenscale_azure_conv.json")
-GOLDEN = json.load(open(GOLDEN_PATH))
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+GOLDEN = json.load(open(os.path.join(GOLDEN_DIR,
+                                     "tokenscale_azure_conv.json")))
+GOLDEN_PRIO = json.load(open(os.path.join(
+    GOLDEN_DIR, "priority_preemption_burstgpt2.json")))
 BASELINES = ["distserve", "aibrix", "blitzscale"]
 
 
@@ -40,20 +48,56 @@ def test_tokenscale_beats_every_baseline(tokenscale_reports):
 
 @pytest.mark.parametrize("engine", list(GOLDEN["engines"]))
 def test_metrics_match_golden(tokenscale_reports, engine):
-    rep = tokenscale_reports[engine]
+    # SimReport.summary() is the same schema the regenerator writes, so
+    # the fixture and this check can never drift apart
+    got = tokenscale_reports[engine].summary()
     want = GOLDEN["engines"][engine]
-    got = {
-        "n_requests": len(rep.requests),
-        "slo_attainment": rep.slo_attainment(),
-        "ttft_attainment": rep.ttft_attainment(),
-        "tpot_attainment": rep.tpot_attainment(),
-        "avg_gpus": rep.avg_gpus(),
-        "throughput": rep.throughput(),
-        "ttft_mean": rep.mean("ttft"),
-        "tpot_mean": rep.mean("tpot"),
-        "ttft_p99": rep.percentile("ttft", 99),
-    }
+    assert set(got) == set(want), engine
     for key, expect in want.items():
-        actual = got[key]
-        assert actual == pytest.approx(expect, rel=0.05), \
-            (engine, key, actual, expect)
+        assert got[key] == pytest.approx(expect, rel=0.05), \
+            (engine, key, got[key], expect)
+
+
+# ---------------------------------------------------------------------------
+# per-priority-class golden (preemption on the contended fleet)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def priority_reports():
+    g = GOLDEN_PRIO
+    # the run is driven entirely by the recorded spec, including the mix
+    mix = {int(k): v for k, v in g["priority_mix"].items()}
+    assert mix == DEFAULT_PRIORITY_MIX, \
+        "golden priority_mix stale — regenerate (scripts/regen_golden.py)"
+    return {eng: run_policy(
+        g["policy"], g["trace"], model=g["model"], tp=g["tp"],
+        duration=g["duration"], rps=g["rps"], seed=g["seed"], engine=eng,
+        preemption=g["preemption"], max_instances=g["max_instances"],
+        priority_mix=mix)
+        for eng in g["engines"]}
+
+
+@pytest.mark.parametrize("engine", list(GOLDEN_PRIO["engines"]))
+def test_priority_metrics_match_golden(priority_reports, engine):
+    rep = priority_reports[engine]
+    want = GOLDEN_PRIO["engines"][engine]
+    assert len(rep.requests) == want["n_requests"]
+    assert len(rep.preemptions) == pytest.approx(want["n_preemptions"],
+                                                 rel=0.05)
+    for cls, w in want["classes"].items():
+        got = rep.class_summary(int(cls))   # same schema as the regenerator
+        assert set(got) == set(w), (engine, cls)
+        assert got["n"] == w["n"], (engine, cls)
+        for key in ("slo_attainment", "ttft_p99", "tpot_p99"):
+            assert got[key] == pytest.approx(w[key], rel=0.05), \
+                (engine, cls, key)
+
+
+@pytest.mark.parametrize("engine", list(GOLDEN_PRIO["engines"]))
+def test_priority_gradient_holds(priority_reports, engine):
+    """Higher classes see no worse p99 TTFT than lower ones — the whole
+    point of priority-ordered admission + eviction."""
+    rep = priority_reports[engine]
+    p99 = [rep.percentile("ttft", 99, priority=c)
+           for c in rep.priority_classes()]
+    assert p99 == sorted(p99)
