@@ -6,6 +6,8 @@
                                                        # event-driven engine
     PYTHONPATH=src python -m benchmarks.run --engine=events --bench=tails
                                  # per-priority-class p99/p999 tail rows
+    PYTHONPATH=src python -m benchmarks.run --spec=my_experiment.json
+                                 # a declarative ExperimentSpec file
 
 Each benchmark prints ``name,metric,value`` CSV rows (plus section
 headers).  Simulation benches replay bursty traces through the real
@@ -16,6 +18,8 @@ in the dry-run roofline, EXPERIMENTS.md).
 """
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 import time
 
@@ -25,13 +29,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.core import (CHIPS, InstanceSpec, OutputPredictor,
+from repro.core import (CHIPS, ExperimentSpec, InstanceSpec, OutputPredictor,
                         TokenScalePolicy, plan_convertible, profile)
 from repro.core.autoscaler import ComboPolicy
 from repro.core.velocity import BUCKETS
 from repro.sim import get_trace, step_trace
 from repro.sim.runner import (compare_engines, compare_policies, get_engine,
-                              make_policy, run_policy)
+                              hetero_demo_spec, make_policy, run_policy,
+                              run_spec)
 
 ROWS: list[str] = []
 
@@ -154,9 +159,7 @@ def _run_step_trace(policy_name: str):
     # rapid-response buffer (the Convertible Decoder) can absorb it
     trace = step_trace(30.0, base_rps=1.0, burst_rps=20.0, burst_start=10.0,
                        burst_len=4.0, seed=3)
-    policy = make_policy(policy_name, prof, 1,
-                         mean_in=float(np.mean([r.in_len for r in trace])),
-                         mean_out=float(np.mean([r.out_len for r in trace])))
+    policy = make_policy(policy_name, prof, 1, trace=trace)
     conv = plan_convertible(cfg, inst, 32, 1200.0, 0.2, 8)
     n_conv = 1 if policy_name == "tokenscale" else 0
     cl = get_engine(ENGINE)(cfg, inst, prof, policy,
@@ -195,11 +198,9 @@ def fig11_provision_correlation():
     def smooth(x, w=5):
         return np.convolve(x, np.ones(w) / w, mode="same")
 
-    mean_in = float(np.mean([r.in_len for r in trace]))
-    mean_out = float(np.mean([r.out_len for r in trace]))
     conv = plan_convertible(cfg, inst, 32, 1200.0, 0.2, 8)
     for pol in ["tokenscale", "distserve", "aibrix", "blitzscale"]:
-        policy = make_policy(pol, prof, 1, mean_in, mean_out)
+        policy = make_policy(pol, prof, 1, trace=trace)
         cl = get_engine(ENGINE)(cfg, inst, prof, policy,
                                OutputPredictor(0.85, 0), conv_cfg=conv,
                                n_convertible=1 if pol == "tokenscale" else 0)
@@ -256,11 +257,9 @@ def fig14_ablation():
     inst = InstanceSpec(CHIPS["a100"], tp=1)
     prof = profile(cfg, inst)
     trace = get_trace("mixed", duration_s=120.0, rps=10.0, seed=0)
-    mean_in = float(np.mean([r.in_len for r in trace]))
-    mean_out = float(np.mean([r.out_len for r in trace]))
 
     def ds():
-        return make_policy("distserve", prof, 0, mean_in, mean_out)
+        return make_policy("distserve", prof, 0, trace=trace)
 
     def ts():
         return TokenScalePolicy(prof, convertible=0)
@@ -499,10 +498,45 @@ def tails():
                      len(rep.preemptions))
 
 
+def hetero():
+    """Heterogeneous fleet (a100-TP2 prefill + h100-TP1 decode pools) and
+    a two-model cluster, each through both engines via the same
+    ``run_spec`` entry point — the two scenario axes the pool-centric
+    control plane opens."""
+    from repro.core import FleetSpec, PoolSpec, TraceRoute
+    for eng in ["fluid", "events"]:
+        rep = run_spec(hetero_demo_spec(duration=30.0, rps=6.0, engine=eng))
+        emit("hetero", f"mixed_chips,{eng},requests", len(rep.requests))
+        emit("hetero", f"mixed_chips,{eng},slo_pct",
+             100 * rep.slo_attainment())
+        emit("hetero", f"mixed_chips,{eng},ttft_p99_ms",
+             1e3 * rep.percentile("ttft", 99))
+        emit("hetero", f"mixed_chips,{eng},avg_gpus", rep.avg_gpus())
+    two_model = ExperimentSpec(
+        fleet=FleetSpec(
+            pools=(
+                PoolSpec("llama-pre", "prefill", "llama31_8b", "a100"),
+                PoolSpec("llama-dec", "decode", "llama31_8b", "a100"),
+                PoolSpec("qwen-pre", "prefill", "qwen25_32b", "a100", tp=4),
+                PoolSpec("qwen-dec", "decode", "qwen25_32b", "a100", tp=4),
+            ),
+            routes=(TraceRoute("llama31_8b", "azure_conv", rps=5.0),
+                    TraceRoute("qwen25_32b", "azure_code", rps=3.0))),
+        policy="tokenscale", engine=ENGINE, duration=30.0, seed=0)
+    rep = run_spec(two_model)
+    for m in rep.models():
+        s = rep.model_summary(m)
+        emit("hetero", f"two_model,{m},requests", s["n"])
+        emit("hetero", f"two_model,{m},slo_pct", 100 * s["slo_attainment"])
+        emit("hetero", f"two_model,{m},ttft_p99_ms", 1e3 * s["ttft_p99"])
+    emit("hetero", "two_model,avg_gpus", rep.avg_gpus())
+
+
 def smoke():
     """~10 s sanity pass for scripts/check.sh: one small config through
-    both engines, plus a tails smoke row (priority classes + preemption
-    through the event engine)."""
+    both engines, a tails smoke row (priority classes + preemption
+    through the event engine), and a heterogeneous-fleet row (mixed
+    chips/TP through run_spec)."""
     from repro.sim.traces import DEFAULT_PRIORITY_MIX
     for eng in ["fluid", "events"]:
         rep = run_policy("tokenscale", "azure_conv", duration=20.0, rps=6.0,
@@ -519,6 +553,27 @@ def smoke():
     emit("smoke", "tails,class0_ttft_p99_ms",
          1e3 * rep.percentile("ttft", 99, priority=0))
     emit("smoke", "tails,class0_slo_pct", 100 * rep.slo_attainment(0))
+    rep = run_spec(hetero_demo_spec(duration=20.0, rps=6.0,
+                                    engine="events"))
+    emit("smoke", "hetero,requests", len(rep.requests))
+    emit("smoke", "hetero,slo_pct", 100 * rep.slo_attainment())
+    emit("smoke", "hetero,avg_gpus", rep.avg_gpus())
+
+
+def run_spec_files(paths: list[str]):
+    """Run declarative ExperimentSpec JSON files (--spec=...) and emit
+    their summary + per-model rows."""
+    for path in paths:
+        spec = ExperimentSpec.load(path)
+        rep = run_spec(spec)
+        tag = os.path.splitext(os.path.basename(path))[0]
+        for k, v in rep.summary().items():
+            emit("spec", f"{tag},{k}", v)
+        models = rep.models()
+        if len(models) > 1:
+            for m in models:
+                for k, v in rep.model_summary(m).items():
+                    emit("spec", f"{tag},{m},{k}", v)
 
 
 BENCHES = {
@@ -540,23 +595,47 @@ BENCHES = {
     "multipod": multipod_scaling,
     "diffval": diffval,
     "tails": tails,
+    "hetero": hetero,
     "smoke": smoke,
 }
 
 
-def main() -> None:
+def parse_args(argv=None) -> argparse.Namespace:
+    ap = argparse.ArgumentParser(
+        prog="benchmarks.run", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("benches", nargs="*", metavar="bench",
+                    help="bench names to run (default: all); "
+                         f"one of {', '.join(sorted(BENCHES))}")
+    ap.add_argument("--engine", default="fluid",
+                    help="simulation engine for every sim-shaped bench "
+                         "(fluid | events; DESIGN.md §1)")
+    ap.add_argument("--bench", action="append", default=[],
+                    metavar="NAME[,NAME...]",
+                    help="comma-separated bench names (may repeat; "
+                         "equivalent to positional args)")
+    ap.add_argument("--spec", action="append", default=[], metavar="JSON",
+                    help="run a declarative ExperimentSpec JSON file "
+                         "(may repeat); skips the default all-bench run")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> None:
     global ENGINE
-    args = []
-    for a in sys.argv[1:]:
-        if a.startswith("--engine="):
-            ENGINE = a.split("=", 1)[1]
-            get_engine(ENGINE)      # fail fast on unknown engine names
-        elif a.startswith("--bench="):
-            args += [n for n in a.split("=", 1)[1].split(",") if n]
-        else:
-            args.append(a)
-    names = args or list(BENCHES)
+    args = parse_args(argv)
+    get_engine(args.engine)         # fail fast on unknown engine names
+    ENGINE = args.engine
+    names = list(args.benches)
+    for group in args.bench:
+        names += [n for n in group.split(",") if n]
+    for n in names:
+        if n not in BENCHES:
+            sys.exit(f"unknown bench {n!r}; expected one of "
+                     f"{', '.join(sorted(BENCHES))}")
+    if not names and not args.spec:
+        names = list(BENCHES)
     print("bench,metric,value")
+    run_spec_files(args.spec)
     for n in names:
         t0 = time.perf_counter()
         BENCHES[n]()

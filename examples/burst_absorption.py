@@ -25,9 +25,8 @@ def run(policy_name: str, n_convertible: int, engine: str = "fluid"):
     prof = profile(cfg, inst)
     trace = step_trace(30.0, base_rps=1.0, burst_rps=20.0,
                        burst_start=10.0, burst_len=4.0, seed=3)
-    policy = make_policy(policy_name, prof, n_convertible,
-                         mean_in=float(np.mean([r.in_len for r in trace])),
-                         mean_out=float(np.mean([r.out_len for r in trace])))
+    # baseline thresholds calibrated from the actual trace's size stats
+    policy = make_policy(policy_name, prof, n_convertible, trace=trace)
     conv = plan_convertible(cfg, inst, 32, 1200.0, 0.2, 8)
     cl = get_engine(engine)(cfg, inst, prof, policy, OutputPredictor(0.85, 3),
                             conv_cfg=conv, n_convertible=n_convertible)

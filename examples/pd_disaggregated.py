@@ -25,14 +25,22 @@ from repro.serving import PDCluster, Request
 
 def sim_crosscheck(engine: str):
     """The same PD-disaggregated scenario shape at cluster scale, on the
-    analytic simulator (which engine is selectable)."""
-    from repro.sim.runner import run_policy
+    analytic simulator (which engine is selectable), plus the
+    heterogeneous variant the pool-centric control plane enables:
+    a100-TP2 prefillers feeding h100-TP1 decoders via one declarative
+    ExperimentSpec (core.fleet)."""
+    from repro.sim.runner import hetero_demo_spec, run_policy, run_spec
     rep = run_policy("tokenscale", "azure_conv", duration=30.0, rps=6.0,
                      seed=0, engine=engine)
     print(f"\n[{engine} sim cross-check] {len(rep.requests)} requests, "
           f"SLO = {rep.slo_attainment() * 100:.1f}%, "
           f"p99 TTFT = {rep.percentile('ttft', 99) * 1e3:.0f} ms, "
           f"avg GPUs = {rep.avg_gpus():.2f}")
+    het = run_spec(hetero_demo_spec(duration=30.0, rps=6.0, engine=engine))
+    print(f"[{engine} hetero fleet: a100-TP2 prefill -> h100-TP1 decode] "
+          f"SLO = {het.slo_attainment() * 100:.1f}%, "
+          f"p99 TTFT = {het.percentile('ttft', 99) * 1e3:.0f} ms, "
+          f"avg GPUs = {het.avg_gpus():.2f}")
 
 
 def parse_engine(argv):

@@ -16,7 +16,7 @@ if [[ "${1:-}" == "--slow" ]]; then
     python -m pytest -x -q -m slow
 fi
 
-echo "== benchmark smoke (both sim engines + tails/preemption row) =="
+echo "== benchmark smoke (both sim engines + tails/preemption + hetero fleet rows) =="
 python -m benchmarks.run --bench=smoke
 
 echo "OK: all checks passed"

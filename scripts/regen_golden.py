@@ -8,7 +8,7 @@ diff of the JSON files is part of the review surface.
 import json
 import os
 
-from repro.sim.runner import run_policy
+from repro.sim.runner import hetero_demo_spec, run_policy, run_spec
 from repro.sim.traces import DEFAULT_PRIORITY_MIX
 
 HERE = os.path.join(os.path.dirname(__file__), "..", "tests", "golden")
@@ -52,9 +52,28 @@ def regen_priority_preemption():
     return "priority_preemption_burstgpt2.json", spec
 
 
+def regen_hetero_fleet():
+    """Heterogeneous-fleet golden: the canonical a100-TP2 prefill ->
+    h100-TP1 decode spec through both engines.  The recorded experiment
+    is the ExperimentSpec's own JSON form, so the regression test replays
+    it through the declarative path (ExperimentSpec.from_dict ->
+    run_spec)."""
+    out = {"spec": None, "engines": {}}
+    for eng in ["fluid", "events"]:
+        spec = hetero_demo_spec(duration=30.0, rps=6.0, seed=0, engine=eng)
+        rep = run_spec(spec)
+        out["engines"][eng] = rep.summary()  # schema shared with the test
+        if out["spec"] is None:
+            d = spec.to_dict()
+            d.pop("engine")          # per-engine; the test sets it
+            out["spec"] = d
+    return "hetero_fleet.json", out
+
+
 def main():
     for name, spec in [regen_tokenscale_azure_conv(),
-                       regen_priority_preemption()]:
+                       regen_priority_preemption(),
+                       regen_hetero_fleet()]:
         path = os.path.join(HERE, name)
         with open(path, "w") as f:
             json.dump(spec, f, indent=2)

@@ -10,11 +10,19 @@ cluster simulator executes them with realistic startup latency.
                   (Knative KPA-style) decoder
   * BlitzScale  — request-count thresholds for both stages + "live" scaling
                   (scale-up start latency removed, §V Baselines)
+
+Policies are constructed uniformly through a string-keyed registry
+(``@register_policy`` / ``build_policy``): every factory takes the
+prefill pool's ``VelocityProfile``, the decode pool's (they differ on
+heterogeneous fleets), and the trace's request-size statistics for the
+baselines' Table I threshold derivations.  ``core.fleet`` adapts the
+resulting per-model policies onto named pools.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
+from typing import Callable, Optional
 
 from repro.core.velocity import BUCKETS, VelocityProfile
 
@@ -84,8 +92,13 @@ class TokenScalePolicy(Policy):
 
     def __init__(self, profile: VelocityProfile, convertible: int = 1,
                  min_prefillers: int = 1, min_decoders: int = 1,
-                 down_delay: float = 5.0):
+                 down_delay: float = 5.0,
+                 decode_profile: Optional[VelocityProfile] = None):
+        # `profile` is the prefill pool's velocity profile; on heterogeneous
+        # fleets the decode pool runs a different (model, chip, tp) tuple
+        # and supplies its own profile for Eq. (3)
         self.prof = profile
+        self.dprof = decode_profile or profile
         self.convertible = convertible
         self.min_p, self.min_d = min_prefillers, min_decoders
         self.hyst = _DownHysteresis(down_delay)
@@ -95,8 +108,8 @@ class TokenScalePolicy(Policy):
         # slower of prefill/network velocity
         v_eff = min(self.prof.v_prefill, self.prof.v_network)
         i_p = math.ceil(obs.token_rate_in / max(v_eff, 1e-9))
-        # Eq. (3): decoders summed per bucket
-        i_d_f = sum(rate / max(self.prof.v_decode.get(b, 1e9), 1e-9)
+        # Eq. (3): decoders summed per bucket, at the decode pool's velocity
+        i_d_f = sum(rate / max(self.dprof.v_decode.get(b, 1e9), 1e-9)
                     for b, rate in obs.token_rate_by_bucket.items())
         i_d = math.ceil(i_d_f)
         # Eq. (4): regular decoders net of the fixed convertible pool
@@ -201,3 +214,96 @@ class BlitzScalePolicy(Policy):
         i_p = self.hyst.apply("p", obs.cur_prefillers, i_p, obs.t)
         i_d = self.hyst.apply("d", obs.cur_decoders, i_d, obs.t)
         return ScaleDecision(i_p, i_d, live=True)
+
+
+# ---------------------------------------------------------------------------
+# Policy registry: uniform, string-keyed construction
+# ---------------------------------------------------------------------------
+
+#: name -> factory(prof, decode_prof, mean_in, mean_out, n_convertible, **kw)
+POLICY_REGISTRY: dict[str, Callable[..., Policy]] = {}
+
+
+def register_policy(name: str):
+    """Register a policy factory under ``name`` so TokenScale, the §V
+    baselines, and future policies are constructed uniformly from a
+    declarative ``ExperimentSpec`` (``core.fleet``).  Factories receive
+    the prefill pool's profile, the decode pool's profile (they differ on
+    heterogeneous fleets), the trace's mean request sizes (Table I
+    threshold derivations), and the convertible pool size."""
+    def deco(factory):
+        POLICY_REGISTRY[name] = factory
+        factory.policy_name = name
+        return factory
+    return deco
+
+
+def build_policy(name: str, prof: VelocityProfile,
+                 decode_prof: Optional[VelocityProfile] = None,
+                 mean_in: Optional[float] = None,
+                 mean_out: Optional[float] = None,
+                 n_convertible: int = 0, **options) -> Policy:
+    """Construct a registered policy.  ``mean_in``/``mean_out`` are
+    required and must be the *actual* trace's request-size statistics
+    (``sim.traces.trace_stats``) — the baselines derive their Table I
+    thresholds from them, and the historical hardcoded 1024/240 defaults
+    mis-calibrated baselines on skewed traces."""
+    try:
+        factory = POLICY_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {name!r}; registered policies: "
+            f"{sorted(POLICY_REGISTRY)}")
+    if mean_in is None or mean_out is None:
+        raise ValueError(
+            "build_policy needs the workload's request-size stats "
+            "(mean_in/mean_out; see sim.traces.trace_stats) — hardcoded "
+            "defaults mis-calibrate baseline thresholds on skewed traces")
+    return factory(prof, decode_prof=decode_prof or prof,
+                   mean_in=mean_in, mean_out=mean_out,
+                   n_convertible=n_convertible, **options)
+
+
+@register_policy("tokenscale")
+def _build_tokenscale(prof, decode_prof, mean_in, mean_out,
+                      n_convertible, **kw):
+    del mean_in, mean_out     # velocity-native: no size-derived thresholds
+    return TokenScalePolicy(prof, convertible=n_convertible,
+                            decode_profile=decode_prof, **kw)
+
+
+@register_policy("distserve")
+def _build_distserve(prof, decode_prof, mean_in, mean_out,
+                     n_convertible, **kw):
+    # "uses a simulator to determine scaling thresholds" — capacity/size
+    # with a 0.7 safety factor (which is exactly why it overprovisions
+    # after bursts, §VI-A)
+    del n_convertible
+    return DistServePolicy(
+        rps_per_prefiller=max(0.7 * prof.v_prefill / mean_in, 0.5),
+        rps_per_decoder=max(
+            0.5 * decode_prof.v_decode_mean() / (mean_in + mean_out), 0.5),
+        **kw)
+
+
+@register_policy("aibrix")
+def _build_aibrix(prof, decode_prof, mean_in, mean_out,
+                  n_convertible, **kw):
+    # Table I: concurrency threshold = max prefill throughput / average
+    # prefill length (in requests); decoder fixed at 70% memory util
+    del decode_prof, mean_out, n_convertible
+    return AIBrixPolicy(
+        conc_per_prefiller=max(prof.v_prefill / mean_in * 0.5, 1.0),
+        mem_util_target=0.7, **kw)
+
+
+@register_policy("blitzscale")
+def _build_blitzscale(prof, decode_prof, mean_in, mean_out,
+                      n_convertible, **kw):
+    # Table I: prefiller = avg prefill length / max prefill throughput;
+    # decoder = available KVC memory / per-request footprint
+    del mean_out, n_convertible
+    return BlitzScalePolicy(
+        req_per_prefiller=max(prof.v_prefill / mean_in * 0.5, 1.0),
+        req_per_decoder=max(decode_prof.max_batch.get("M-M", 45) * 0.6, 4.0),
+        **kw)

@@ -49,6 +49,20 @@ def plan_convertible(cfg: ModelConfig, inst: InstanceSpec,
                              mem_reserved=mem_r, pool_size=pool)
 
 
+def default_convertible_plan(cfg: ModelConfig, inst: InstanceSpec,
+                             prof) -> ConvertibleConfig:
+    """The standard offline plan used by the experiment runner: expected
+    decode batch = half the M-M SLO-feasible batch from the pool's own
+    velocity profile, a mid-range context, and the §II-C burst-ratio /
+    fleet-size constants the paper's evaluation uses.  Each convertible
+    pool plans against *its own* (model, chip, tp) profile, so
+    heterogeneous fleets restrict each pool correctly (Eq. 5-6)."""
+    return plan_convertible(
+        cfg, inst,
+        expected_decode_batch=max(prof.max_batch.get("M-M", 16) // 2, 1),
+        avg_ctx=1200.0, burst_ratio=0.2, max_decoders=8)
+
+
 def burst_ratio_of_trace(arrivals, window_s: float = 60.0,
                          factor: float = 1.0) -> float:
     """Fraction of tokens arriving above the running-average trendline

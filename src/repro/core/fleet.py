@@ -1,0 +1,306 @@
+"""Pool-centric control-plane API (heterogeneous fleets, multi-model).
+
+TokenScale's velocity metric is defined per (model, chip, tp) instance
+tuple, but the original control plane baked in exactly one: flat
+``prefillers``/``decoders`` counts in ``Observation``/``ScaleDecision``
+and a single ``VelocityProfile`` threaded through everything.  This
+module redesigns that surface around **pools**:
+
+  * ``PoolSpec``        — one named pool of identical instances: a role
+                          (prefill | decode | convertible), a model, a
+                          chip, a TP degree, and an initial size;
+  * ``FleetSpec``       — the declarative fleet: a list of pools plus
+                          per-model trace routing (``TraceRoute``);
+  * ``ExperimentSpec``  — a full experiment (fleet + policy + engine +
+                          preemption + horizon), JSON-round-trippable so
+                          scenarios are files, not kwarg soup;
+  * ``FleetObservation``— per-pool ``PoolSnapshot``s plus per-model
+                          gateway aggregates (``GatewayStats``);
+  * ``FleetPlan``       — pool name -> target instance count (the pool-
+                          centric successor of ``ScaleDecision``);
+  * ``FleetPolicy``     — consumes a ``FleetObservation``, emits a
+                          ``FleetPlan``; ``PerModelFleetPolicy`` adapts
+                          the existing per-model ``Policy`` classes
+                          (TokenScale Eq. 2-4 and the §V baselines)
+                          unchanged onto heterogeneous pools.
+
+The sim engines execute ``FleetPlan``s against mixed pools (e.g.
+a100-TP2 prefillers + h100-TP1 decoders, or two models sharing a
+cluster); the old single-pool entry points survive as thin shims over
+one-pool specs (``sim.runner.run_policy``).  See DESIGN.md §1b.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Optional
+
+from repro.core.autoscaler import Observation, Policy, ScaleDecision
+
+#: valid pool roles
+ROLES = ("prefill", "decode", "convertible")
+
+
+# ---------------------------------------------------------------------------
+# Declarative specs (JSON-round-trippable)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class PoolSpec:
+    """One named pool of identical (model, chip, tp) instances."""
+    name: str
+    role: str                      # prefill | decode | convertible
+    model: str = "llama31_8b"
+    chip: str = "a100"
+    tp: int = 1
+    init: int = 1                  # initial (convertible: fixed) size
+    min: int = 1                   # scale-down floor (non-convertible)
+
+    def __post_init__(self):
+        if self.role not in ROLES:
+            raise ValueError(
+                f"pool {self.name!r}: unknown role {self.role!r}; "
+                f"expected one of {ROLES}")
+
+    @property
+    def key(self) -> tuple[str, str, int]:
+        """The velocity-profile identity (§III-B: per model, chip, tp)."""
+        return (self.model, self.chip, self.tp)
+
+
+@dataclass(frozen=True)
+class TraceRoute:
+    """Per-model trace routing: which workload a model's pools serve."""
+    model: str
+    trace: str = "mixed"
+    rps: float = 8.0
+    priority_mix: Optional[dict[int, float]] = None
+
+
+@dataclass(frozen=True)
+class FleetSpec:
+    """A list of pools + per-model trace routing.
+
+    Constraints (validated here, relied on by the engines): every model
+    has exactly one prefill and one decode pool and at most one
+    convertible pool; pool names are unique; every route names a model
+    that has pools.
+    """
+    pools: tuple[PoolSpec, ...]
+    routes: tuple[TraceRoute, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "pools", tuple(self.pools))
+        object.__setattr__(self, "routes", tuple(self.routes))
+        names = [p.name for p in self.pools]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate pool names: {names}")
+        for m in self.models():
+            roles = [p.role for p in self.pools_of(m)]
+            if roles.count("prefill") != 1 or roles.count("decode") != 1:
+                raise ValueError(
+                    f"model {m!r} needs exactly one prefill and one decode "
+                    f"pool (got roles {roles})")
+            if roles.count("convertible") > 1:
+                raise ValueError(
+                    f"model {m!r} has {roles.count('convertible')} "
+                    "convertible pools; at most one is supported (§IV-C2: "
+                    "the pool is sized offline, not scaled)")
+        for r in self.routes:
+            if r.model not in self.models():
+                raise ValueError(f"route for unknown model {r.model!r}")
+
+    def models(self) -> list[str]:
+        seen: list[str] = []
+        for p in self.pools:
+            if p.model not in seen:
+                seen.append(p.model)
+        return seen
+
+    def pools_of(self, model: str) -> list[PoolSpec]:
+        return [p for p in self.pools if p.model == model]
+
+
+def single_pool_fleet(model: str = "llama31_8b", chip: str = "a100",
+                      tp: int = 1, trace: str = "mixed", rps: float = 8.0,
+                      n_convertible: int = 0,
+                      priority_mix: Optional[dict[int, float]] = None,
+                      init_prefillers: int = 1,
+                      init_decoders: int = 1) -> FleetSpec:
+    """The classic homogeneous PD fleet as a one-model spec — what the
+    legacy ``run_policy(policy, trace, model, chip, tp, ...)`` signature
+    desugars to."""
+    pools = [
+        PoolSpec("prefill", "prefill", model, chip, tp, init=init_prefillers),
+        PoolSpec("decode", "decode", model, chip, tp, init=init_decoders),
+        PoolSpec("convertible", "convertible", model, chip, tp,
+                 init=n_convertible),
+    ]
+    return FleetSpec(tuple(pools),
+                     (TraceRoute(model, trace, rps, priority_mix),))
+
+
+@dataclass(frozen=True)
+class ExperimentSpec:
+    """A declarative, JSON-round-trippable experiment: fleet + policy +
+    engine + preemption + horizon.  ``sim.runner.run_spec`` executes it
+    end-to-end on either engine."""
+    fleet: FleetSpec
+    policy: str = "tokenscale"
+    engine: str = "fluid"
+    preemption: str = "none"
+    duration: float = 120.0
+    seed: int = 0
+    dt: float = 0.025
+    predictor_accuracy: float = 0.85
+    max_instances: int = 64
+    extra_horizon: float = 30.0    # drain time past the last arrival
+    policy_options: dict = field(default_factory=dict)
+
+    # ---- JSON round trip -------------------------------------------------
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+    def to_json(self, **kw) -> str:
+        kw.setdefault("indent", 2)
+        return json.dumps(self.to_dict(), **kw)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExperimentSpec":
+        d = dict(d)
+        f = d.pop("fleet")
+        pools = tuple(PoolSpec(**p) for p in f.get("pools", ()))
+        routes = []
+        for r in f.get("routes", ()):
+            r = dict(r)
+            mix = r.get("priority_mix")
+            if mix is not None:
+                # JSON stringifies int keys; undo that on the way back in
+                r["priority_mix"] = {int(k): float(v) for k, v in mix.items()}
+            routes.append(TraceRoute(**r))
+        return cls(fleet=FleetSpec(pools, tuple(routes)), **d)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(s))
+
+    @classmethod
+    def load(cls, path: str) -> "ExperimentSpec":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+
+# ---------------------------------------------------------------------------
+# Runtime observation / plan types
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PoolSnapshot:
+    """What the metrics plane reports for one pool each interval."""
+    name: str
+    role: str
+    model: str
+    count: int                     # provisioned instances (booting included)
+    ready: int                     # past their startup latency
+    queue_requests: int = 0        # queued/in-progress prefill requests
+    inflight_tokens: float = 0.0   # prefill tokens not yet processed
+    inflight: int = 0              # resident decode requests
+    mem_util: float = 0.0          # mean HBM utilization of ready instances
+
+
+@dataclass
+class GatewayStats:
+    """Per-model gateway aggregates over the rolling 1 s window."""
+    token_rate_in: float = 0.0
+    token_rate_by_bucket: dict[str, float] = field(default_factory=dict)
+    rps: float = 0.0
+    queued: int = 0                # centrally queued requests (Alg.1 line 15)
+
+
+@dataclass
+class FleetObservation:
+    """Per-pool snapshots + per-model gateway aggregates: the pool-centric
+    successor of the flat ``Observation``."""
+    t: float
+    pools: dict[str, PoolSnapshot]
+    gateway: dict[str, GatewayStats]
+
+    def pools_of(self, model: str, role: Optional[str] = None
+                 ) -> list[PoolSnapshot]:
+        return [s for s in self.pools.values()
+                if s.model == model and (role is None or s.role == role)]
+
+
+@dataclass
+class FleetPlan:
+    """Pool name -> target instance count.  Pools absent from ``targets``
+    are left alone (convertible pools are fixed, §IV-C2).  ``live`` pools
+    skip startup latency on scale-up (BlitzScale's ideal live scaling)."""
+    targets: dict[str, int] = field(default_factory=dict)
+    live: set[str] = field(default_factory=set)
+
+
+# ---------------------------------------------------------------------------
+# Fleet policies
+# ---------------------------------------------------------------------------
+
+def flat_observation(model: str, obs: FleetObservation) -> Observation:
+    """The legacy flat view of one model's pools — byte-identical to the
+    pre-pool ``ClusterBase._observation`` when the fleet has a single
+    model group."""
+    (pre,) = obs.pools_of(model, "prefill")
+    (dec,) = obs.pools_of(model, "decode")
+    conv = obs.pools_of(model, "convertible")
+    gw = obs.gateway.get(model, GatewayStats())
+    return Observation(
+        t=obs.t, token_rate_in=gw.token_rate_in,
+        token_rate_by_bucket=gw.token_rate_by_bucket, rps=gw.rps,
+        prefill_queue=pre.queue_requests + gw.queued,
+        decode_inflight=dec.inflight + sum(c.inflight for c in conv),
+        mem_util=dec.mem_util,
+        cur_prefillers=pre.count, cur_decoders=dec.count)
+
+
+class FleetPolicy:
+    """Pool-centric policy interface: one ``FleetPlan`` per interval."""
+    name = "fleet-base"
+
+    def plan(self, obs: FleetObservation) -> FleetPlan:  # pragma: no cover
+        raise NotImplementedError
+
+    def model_policy(self, model: str) -> Optional[Policy]:
+        """The per-model legacy ``Policy`` driving this model's pools, if
+        any — the engines use it to keep policy-conditional routing
+        (burst traffic to Convertible Decoders for TokenScale only)
+        byte-identical with the pre-pool control plane."""
+        return None
+
+
+class PerModelFleetPolicy(FleetPolicy):
+    """Adapts per-model ``Policy`` objects (TokenScale Eq. 2-4 and the §V
+    baselines, unmodified) onto named pools: each model's policy sees a
+    flat ``Observation`` reconstructed from its own pools' snapshots and
+    gateway aggregates, and its ``ScaleDecision`` maps onto that model's
+    prefill/decode pool targets."""
+
+    def __init__(self, policies: dict[str, Policy]):
+        if not policies:
+            raise ValueError("need at least one per-model policy")
+        self.policies = policies
+        names = sorted({p.name for p in policies.values()})
+        self.name = names[0] if len(names) == 1 else "+".join(names)
+
+    def model_policy(self, model: str) -> Optional[Policy]:
+        return self.policies.get(model)
+
+    def plan(self, obs: FleetObservation) -> FleetPlan:
+        plan = FleetPlan()
+        for model, pol in self.policies.items():
+            dec: ScaleDecision = pol.decide(flat_observation(model, obs))
+            (pre_pool,) = obs.pools_of(model, "prefill")
+            (dec_pool,) = obs.pools_of(model, "decode")
+            plan.targets[pre_pool.name] = dec.prefillers
+            plan.targets[dec_pool.name] = dec.decoders
+            if dec.live:
+                plan.live |= {pre_pool.name, dec_pool.name}
+        return plan

@@ -97,6 +97,13 @@ class BurstDetector:
         return short > self.factor * max(long, 1e-9)
 
 
+def _by_velocity(targets: list) -> list:
+    """Candidates in descending prefill-velocity order.  ``sorted`` is
+    stable, so a homogeneous pool (all velocities equal) keeps its
+    original order — single-pool routing is unchanged."""
+    return sorted(targets, key=lambda x: -x.prefill_velocity())
+
+
 class Router:
     """Alg. 1 + decode load balancing."""
 
@@ -110,13 +117,20 @@ class Router:
         """Returns (target, kind) with kind in {"prefiller", "convertible",
         None}; None means queue (line 15).  Feasibility is judged against
         the request's per-class TTFT SLO, so batch traffic accepts busier
-        targets instead of competing for the rapid-response path."""
+        targets instead of competing for the rapid-response path.
+
+        Heterogeneous fleets: candidates may span pools of differing
+        prefill velocity (mixed chips/TP).  Feasibility is per-target —
+        estimated wait = that instance's in-flight tokens / *its own*
+        velocity — and each round scans faster targets first (a stable
+        sort, so homogeneous fleets keep the historical first-feasible
+        order byte-for-byte)."""
         slo = ttft_slo(in_len, priority)
-        for p in prefillers:                      # round 1 (lines 1-7)
+        for p in _by_velocity(prefillers):        # round 1 (lines 1-7)
             wait = p.inflight_tokens() / max(p.prefill_velocity(), 1e-9)
             if wait <= slo:
                 return p, "prefiller"
-        for d in convertibles:                    # round 2 (lines 8-14)
+        for d in _by_velocity(convertibles):      # round 2 (lines 8-14)
             wait = d.inflight_tokens() / max(d.prefill_velocity(), 1e-9)
             if wait <= slo:
                 return d, "convertible"
@@ -126,7 +140,10 @@ class Router:
     def route_decode(self, bucket: str, decoders: list,
                      mem_threshold: float = 0.9):
         """Fewest in-flight requests of `bucket`; convertibles excluded
-        above the memory threshold."""
+        above the memory threshold.  Candidates may span heterogeneous
+        decode pools — per-instance ``mem_util`` already normalizes by
+        each chip's own HBM capacity, so the (inflight, util) key needs
+        no extra velocity weighting."""
         candidates = [d for d in decoders
                       if not (getattr(d, "is_convertible", False)
                               and d.mem_util() > mem_threshold)]

@@ -18,6 +18,7 @@ real ``serving.Engine`` on CPU for reduced models.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import lru_cache
 
 from repro.configs.base import ModelConfig
 from repro.core import hardware as hw
@@ -129,6 +130,18 @@ def profile(cfg: ModelConfig, inst: InstanceSpec,
         v_prefill=profile_prefill_velocity(cfg, inst),
         v_network=profile_network_velocity(cfg, inst),
         v_decode=v_d, max_batch=mb, tpot=tp)
+
+
+@lru_cache(maxsize=None)
+def profile_for(model: str, chip: str, tp: int = 1,
+                tpot_slo: float = 0.1) -> VelocityProfile:
+    """Cached profiler entry by pool key — Token Velocity is defined per
+    (model, chip, tp) tuple (§III-B), and a heterogeneous fleet profiles
+    each of its pools once, not once per experiment."""
+    from repro.configs import get_config
+    from repro.core.hardware import CHIPS
+    return profile(get_config(model), InstanceSpec(CHIPS[chip], tp=tp),
+                   tpot_slo)
 
 
 # ---------------------------------------------------------------------------

@@ -1,12 +1,15 @@
 from repro.sim.cluster import Cluster, SimReport, SimRequest  # noqa: F401
 from repro.sim.events import EventCluster  # noqa: F401
 from repro.sim.instances import (  # noqa: F401
-    ClusterBase, Decoder, ModelCost, Prefiller, PreemptionPolicy,
+    ClusterBase, Decoder, Fleet, ModelCost, ModelGroup, Pool, Prefiller,
+    PreemptionPolicy,
 )
 from repro.sim.traces import (  # noqa: F401
     DEFAULT_PRIORITY_MIX, PRIORITY_CLASSES, TRACES, TraceRequest, TraceSpec,
-    assign_priorities, generate, generate_mixed, get_trace, step_trace,
+    TraceStats, assign_priorities, generate, generate_mixed, get_trace,
+    step_trace, trace_stats,
 )
 from repro.sim.runner import (  # noqa: F401
-    ENGINES, compare_engines, compare_policies, get_engine, run_policy,
+    ENGINES, build_fleet, build_traces, compare_engines, compare_policies,
+    get_engine, make_policy, run_policy, run_spec,
 )

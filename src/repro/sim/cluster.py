@@ -17,7 +17,11 @@ Fidelity choices (documented in DESIGN.md):
     autoscaling", §V Baselines).
 
 The instance/roofline/metrics layer shared with the event engine lives in
-``sim.instances``.
+``sim.instances``, which also holds the pool layer: the ``prefillers``/
+``decoders``/``convertibles`` views this loop iterates flatten the
+fleet's named pools, so the same tick loop drives heterogeneous
+(mixed-chip/TP) and multi-model fleets — per-pool scaling happens in the
+shared ``ClusterBase._scale`` executing the policy's ``FleetPlan``.
 """
 from __future__ import annotations
 

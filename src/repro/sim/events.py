@@ -19,7 +19,14 @@ TTFT/TPOT therefore come out strictly per-request (non-smeared): admission
 and finish happen at exact event timestamps and ``generated`` advances in
 whole tokens.  The differential suite (tests/test_sim_differential.py)
 asserts this engine and the fluid engine agree on throughput, mean
-TTFT/TPOT, and scaling decisions for every trace x policy.
+TTFT/TPOT, and scaling decisions for every trace x policy; the
+heterogeneous/multi-model variants are in tests/test_fleet_api.py.
+
+Pools: every instance this engine wakes, kicks, or completes belongs to
+a named pool (``sim.instances.Pool``); per-iteration events carry the
+instance, so mixed fleets (different chips/TP per pool, several models)
+need no event-engine-specific handling — pool membership and per-model
+routing live in the shared ``ClusterBase``.
 
 Fidelity choices and the fluid-vs-event comparison are documented in
 DESIGN.md.

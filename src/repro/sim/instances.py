@@ -28,6 +28,9 @@ from repro.configs.base import ModelConfig
 from repro.core import hardware as hw
 from repro.core.autoscaler import Observation, Policy, TokenScalePolicy
 from repro.core.convertible import ConvertibleConfig
+from repro.core.fleet import (FleetObservation, FleetPolicy, GatewayStats,
+                              PerModelFleetPolicy, PoolSnapshot, PoolSpec,
+                              flat_observation)
 from repro.core.hardware import InstanceSpec
 from repro.core.predictor import OutputPredictor
 from repro.core.router import (PRIORITY_STANDARD, BurstDetector, Router,
@@ -52,6 +55,11 @@ class SimRequest:
     @property
     def priority(self) -> int:
         return getattr(self.src, "priority", PRIORITY_STANDARD)
+
+    @property
+    def model(self) -> str:
+        """The model this request targets ("" = the fleet's default)."""
+        return getattr(self.src, "model", "")
 
     @property
     def ttft(self) -> float:
@@ -325,6 +333,84 @@ class Decoder(Instance):
 
 
 # ---------------------------------------------------------------------------
+# Pools & fleets (runtime side of core.fleet's declarative specs)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Pool:
+    """One named pool of identical instances, with its spec resolved to
+    runtime objects: model config, instance spec, velocity profile, cost
+    constants, and (for convertible pools) the Eq. 5-6 restriction."""
+    spec: PoolSpec
+    cfg: ModelConfig
+    inst: InstanceSpec
+    prof: VelocityProfile
+    conv_cfg: Optional[ConvertibleConfig] = None
+    cost: Optional[ModelCost] = None
+    instances: list = field(default_factory=list)
+
+    def __post_init__(self):
+        if self.cost is None:
+            self.cost = ModelCost.of(self.cfg)
+
+
+class ModelGroup:
+    """One model's pools (exactly one prefill + one decode, at most one
+    convertible) plus its own router/burst-detector: burst detection and
+    Alg. 1 routing are per model, so one tenant's spike never routes
+    another tenant's traffic to the wrong Convertible Decoders."""
+
+    def __init__(self, model: str, prefill: Pool, decode: Pool,
+                 convertible: Optional[Pool]):
+        self.model = model
+        self.prefill = prefill
+        self.decode = decode
+        self.convertible = convertible
+        self.router = Router(BurstDetector())
+
+    def conv_instances(self) -> list:
+        return self.convertible.instances if self.convertible else []
+
+    def decode_instances(self) -> list:
+        return self.decode.instances + self.conv_instances()
+
+
+class Fleet:
+    """Runtime fleet: named ``Pool``s in declaration order + per-model
+    groups.  ``sim.runner.build_fleet`` resolves a declarative
+    ``core.fleet.FleetSpec`` into one of these; the legacy single-pool
+    constructor path builds one inline."""
+
+    def __init__(self, pools: list[Pool]):
+        self.pools: dict[str, Pool] = {}
+        for p in pools:
+            if p.spec.name in self.pools:
+                raise ValueError(f"duplicate pool name {p.spec.name!r}")
+            self.pools[p.spec.name] = p
+        models: list[str] = []
+        for p in pools:
+            if p.spec.model not in models:
+                models.append(p.spec.model)
+        self.groups: dict[str, ModelGroup] = {}
+        for m in models:
+            mine = [p for p in pools if p.spec.model == m]
+            pre = [p for p in mine if p.spec.role == "prefill"]
+            dec = [p for p in mine if p.spec.role == "decode"]
+            conv = [p for p in mine if p.spec.role == "convertible"]
+            if len(pre) != 1 or len(dec) != 1 or len(conv) > 1:
+                raise ValueError(
+                    f"model {m!r}: need exactly one prefill and one decode "
+                    f"pool and at most one convertible pool, got "
+                    f"{[p.spec.name for p in mine]}")
+            self.groups[m] = ModelGroup(m, pre[0], dec[0],
+                                        conv[0] if conv else None)
+        self.default_model = models[0]
+
+    def role_pools(self, role: str) -> list[Pool]:
+        return [p for p in self.pools.values() if p.spec.role == role]
+
+
+# ---------------------------------------------------------------------------
 # Metrics pipeline (§V) — shared by both engines
 # ---------------------------------------------------------------------------
 
@@ -340,19 +426,29 @@ class SimReport:
     preemptions: list[tuple] = field(default_factory=list)
 
     # ---- SLO metrics (§V) ----
-    # Every metric optionally restricts to one priority class; SLO targets
-    # are per-class (core.router.ttft_slo / tpot_slo).
+    # Every metric optionally restricts to one priority class and/or one
+    # model (multi-model fleets); SLO targets are per-class
+    # (core.router.ttft_slo / tpot_slo).
 
-    def _pool(self, priority: Optional[int] = None) -> list[SimRequest]:
-        if priority is None:
-            return self.requests
-        return [r for r in self.requests if r.priority == priority]
+    def _pool(self, priority: Optional[int] = None,
+              model: Optional[str] = None) -> list[SimRequest]:
+        reqs = self.requests
+        if priority is not None:
+            reqs = [r for r in reqs if r.priority == priority]
+        if model is not None:
+            reqs = [r for r in reqs if r.model == model]
+        return reqs
 
     def priority_classes(self) -> list[int]:
         return sorted({r.priority for r in self.requests})
 
-    def slo_attainment(self, priority: Optional[int] = None) -> float:
-        reqs = self._pool(priority)
+    def models(self) -> list[str]:
+        """Distinct models served, in per-model SLO accounting order."""
+        return sorted({r.model for r in self.requests})
+
+    def slo_attainment(self, priority: Optional[int] = None,
+                       model: Optional[str] = None) -> float:
+        reqs = self._pool(priority, model)
         ok = [1.0 if (r.ttft <= ttft_slo(r.src.in_len, r.priority)
                       and r.tpot <= tpot_slo(r.priority)) else 0.0
               for r in reqs if r.t_finish >= 0]
@@ -360,15 +456,17 @@ class SimReport:
         total = len(ok) + unfinished
         return sum(ok) / max(total, 1)
 
-    def ttft_attainment(self, priority: Optional[int] = None) -> float:
-        reqs = self._pool(priority)
+    def ttft_attainment(self, priority: Optional[int] = None,
+                        model: Optional[str] = None) -> float:
+        reqs = self._pool(priority, model)
         done = [r for r in reqs if r.t_first_token >= 0]
         ok = sum(1 for r in done
                  if r.ttft <= ttft_slo(r.src.in_len, r.priority))
         return ok / max(len(reqs), 1)
 
-    def tpot_attainment(self, priority: Optional[int] = None) -> float:
-        reqs = self._pool(priority)
+    def tpot_attainment(self, priority: Optional[int] = None,
+                        model: Optional[str] = None) -> float:
+        reqs = self._pool(priority, model)
         done = [r for r in reqs if r.t_finish >= 0]
         ok = sum(1 for r in done if r.tpot <= tpot_slo(r.priority))
         return ok / max(len(reqs), 1)
@@ -376,19 +474,21 @@ class SimReport:
     def avg_gpus(self) -> float:
         return self.gpu_seconds / max(self.duration, 1e-9)
 
-    def throughput(self) -> float:
+    def throughput(self, model: Optional[str] = None) -> float:
         """Finished requests per second over the horizon."""
-        done = sum(1 for r in self.requests if r.t_finish >= 0)
+        done = sum(1 for r in self._pool(model=model) if r.t_finish >= 0)
         return done / max(self.duration, 1e-9)
 
-    def mean(self, what: str, priority: Optional[int] = None) -> float:
-        vals = [getattr(r, what) for r in self._pool(priority)
+    def mean(self, what: str, priority: Optional[int] = None,
+             model: Optional[str] = None) -> float:
+        vals = [getattr(r, what) for r in self._pool(priority, model)
                 if r.t_finish >= 0 and getattr(r, what) >= 0]
         return float(np.mean(vals)) if vals else float("nan")
 
     def percentile(self, what: str, q: float,
-                   priority: Optional[int] = None) -> float:
-        vals = [getattr(r, what) for r in self._pool(priority)
+                   priority: Optional[int] = None,
+                   model: Optional[str] = None) -> float:
+        vals = [getattr(r, what) for r in self._pool(priority, model)
                 if r.t_finish >= 0 and getattr(r, what) >= 0]
         return float(np.percentile(vals, q)) if vals else float("nan")
 
@@ -415,6 +515,19 @@ class SimReport:
             "tpot_p99": self.percentile("tpot", 99, priority=priority),
         }
 
+    def model_summary(self, model: str) -> dict:
+        """Per-model SLO accounting for multi-model fleets (same schema
+        contract as ``summary``/``class_summary``: goldens and their
+        regenerator share it)."""
+        return {
+            "n": len(self._pool(model=model)),
+            "slo_attainment": self.slo_attainment(model=model),
+            "ttft_attainment": self.ttft_attainment(model=model),
+            "tpot_attainment": self.tpot_attainment(model=model),
+            "throughput": self.throughput(model=model),
+            "ttft_p99": self.percentile("ttft", 99, model=model),
+        }
+
 
 # ---------------------------------------------------------------------------
 # Control plane glue — shared by both engines
@@ -422,13 +535,30 @@ class SimReport:
 
 class ClusterBase:
     """PD-disaggregated cluster state + the unmodified TokenScale control
-    plane.  Subclasses implement ``run`` (how time advances) and may hook
-    ``_submit_prefill_work`` / ``_after_scale`` to schedule work."""
+    plane, executing ``FleetPlan``s against named pools (mixed chips/TP,
+    multiple models).  Subclasses implement ``run`` (how time advances)
+    and may hook ``_submit_prefill_work`` / ``_after_scale`` to schedule
+    work.
+
+    Two construction paths share one body:
+
+      * pool-centric — ``Engine(fleet, policy=fleet_policy)`` with a
+        runtime ``Fleet`` and a ``FleetPolicy`` (what ``sim.runner
+        .run_spec`` builds from an ``ExperimentSpec``);
+      * legacy — ``Engine(cfg, inst_spec, profile, policy, ...)``: the
+        historical single-(model, chip, tp) signature, desugared into a
+        one-model fleet (pools "prefill"/"decode"/"convertible") with the
+        per-model ``Policy`` adapted by ``PerModelFleetPolicy`` — every
+        decision it makes is byte-identical to the pre-pool control
+        plane (the golden fixtures enforce this).
+    """
 
     engine = "base"
 
-    def __init__(self, cfg: ModelConfig, inst_spec: InstanceSpec,
-                 profile: VelocityProfile, policy: Policy,
+    def __init__(self, cfg: "ModelConfig | Fleet",
+                 inst_spec: Optional[InstanceSpec] = None,
+                 profile: Optional[VelocityProfile] = None,
+                 policy: "Policy | FleetPolicy | None" = None,
                  predictor: Optional[OutputPredictor] = None,
                  conv_cfg: Optional[ConvertibleConfig] = None,
                  n_convertible: int = 0,
@@ -436,14 +566,25 @@ class ClusterBase:
                  dt: float = 0.025, scale_interval: float = 1.0,
                  max_instances: int = 64,
                  preemption: "PreemptionPolicy | str" = "none"):
-        self.cfg = cfg
-        self.spec = inst_spec
-        self.prof = profile
-        self.policy = policy
+        if isinstance(cfg, Fleet):
+            fleet = cfg
+            fpolicy = policy if policy is not None else inst_spec
+            if not isinstance(fpolicy, FleetPolicy):
+                raise TypeError("fleet construction needs a FleetPolicy")
+        else:
+            if inst_spec is None or profile is None or policy is None:
+                raise TypeError(
+                    "legacy construction needs (cfg, inst_spec, profile, "
+                    "policy)")
+            fleet = self._single_pool_fleet(
+                cfg, inst_spec, profile, conv_cfg,
+                init_prefillers, init_decoders, n_convertible)
+            fpolicy = policy if isinstance(policy, FleetPolicy) \
+                else PerModelFleetPolicy({cfg.name: policy})
+        self.fleet = fleet
+        self.pools = fleet.pools
+        self.policy = fpolicy
         self.predictor = predictor or OutputPredictor(0.85)
-        self.cost = ModelCost.of(cfg)
-        self.router = Router(BurstDetector())
-        self.conv_cfg = conv_cfg
         self.preemption = PreemptionPolicy.of(preemption)
         # (t, victim_priority, preemptor_priority, victim_generated) audit
         # trail — the preemption property tests assert over it
@@ -452,14 +593,17 @@ class ClusterBase:
         self.scale_interval = scale_interval
         self.max_instances = max_instances
         self._iid = 0
-        self.prefillers: list[Prefiller] = [
-            self._new_prefiller(0.0) for _ in range(init_prefillers)]
-        self.decoders: list[Decoder] = [
-            self._new_decoder(0.0) for _ in range(init_decoders)]
-        self.convertibles: list[Decoder] = []
-        for _ in range(n_convertible):
-            d = self._new_decoder(0.0, convertible=True)
-            self.convertibles.append(d)
+        for pool in self.pools.values():     # declaration order = iid order
+            for _ in range(pool.spec.init):
+                pool.instances.append(self._spawn(pool, 0.0))
+        # legacy aliases for the default model group (single-pool callers)
+        g = fleet.groups[fleet.default_model]
+        self.cfg = g.prefill.cfg
+        self.spec = g.prefill.inst
+        self.prof = g.prefill.prof
+        self.cost = g.decode.cost
+        self.conv_cfg = g.convertible.conv_cfg if g.convertible else None
+        self.router = g.router
         self.pending_decode: list[tuple[float, SimRequest]] = []  # (ready_t,…)
         self.wait_queue: list[SimRequest] = []
         self.finished: list[SimRequest] = []
@@ -469,17 +613,74 @@ class ClusterBase:
         self._arrivals: list[tuple[float, SimRequest]] = []
 
     # ------------------------------------------------------------------
-    def _new_prefiller(self, ready_t: float) -> Prefiller:
-        self._iid += 1
-        return Prefiller(self._iid, self.spec, self.cost, ready_t,
-                         self.prof.v_prefill)
+    @staticmethod
+    def _single_pool_fleet(cfg, inst_spec, profile, conv_cfg,
+                           init_prefillers, init_decoders,
+                           n_convertible) -> Fleet:
+        """The legacy signature desugared: one model, one chip, one TP."""
+        chip, tp = inst_spec.chip.name, inst_spec.tp
+        mk = lambda name, role, init: Pool(      # noqa: E731
+            PoolSpec(name, role, cfg.name, chip, tp, init=init),
+            cfg, inst_spec, profile,
+            conv_cfg=conv_cfg if role == "convertible" else None)
+        return Fleet([mk("prefill", "prefill", init_prefillers),
+                      mk("decode", "decode", init_decoders),
+                      mk("convertible", "convertible", n_convertible)])
 
-    def _new_decoder(self, ready_t: float, convertible: bool = False) -> Decoder:
+    def _spawn(self, pool: Pool, ready_t: float):
         self._iid += 1
-        d = Decoder(self._iid, self.spec, self.cost, ready_t,
-                    conv=self.conv_cfg if convertible else None)
-        d.is_convertible = convertible
-        return d
+        if pool.spec.role == "prefill":
+            i: "Prefiller | Decoder" = Prefiller(
+                self._iid, pool.inst, pool.cost, ready_t,
+                pool.prof.v_prefill)
+        else:
+            conv = pool.spec.role == "convertible"
+            i = Decoder(self._iid, pool.inst, pool.cost, ready_t,
+                        conv=pool.conv_cfg if conv else None)
+            i.is_convertible = conv
+        i.pool = pool
+        return i
+
+    # ---- flat views + legacy factories (compat surface) --------------
+    def _role_view(self, role: str) -> list:
+        """All instances of one role, flattened across pools.  Always a
+        copy — mutating it is a silent no-op regardless of fleet shape,
+        so callers that grow/shrink the fleet must go through the pool's
+        own ``instances`` list (as ``_scale`` does)."""
+        return [i for p in self.fleet.role_pools(role)
+                for i in p.instances]
+
+    @property
+    def prefillers(self) -> list:
+        return self._role_view("prefill")
+
+    @property
+    def decoders(self) -> list:
+        return self._role_view("decode")
+
+    @property
+    def convertibles(self) -> list:
+        return self._role_view("convertible")
+
+    def _new_prefiller(self, ready_t: float) -> Prefiller:
+        g = self.fleet.groups[self.fleet.default_model]
+        return self._spawn(g.prefill, ready_t)
+
+    def _new_decoder(self, ready_t: float, convertible: bool = False
+                     ) -> Decoder:
+        g = self.fleet.groups[self.fleet.default_model]
+        pool = g.convertible if convertible else g.decode
+        return self._spawn(pool, ready_t)
+
+    # ---- model routing -----------------------------------------------
+    def _group_of(self, req: SimRequest) -> ModelGroup:
+        model = req.model or self.fleet.default_model
+        try:
+            return self.fleet.groups[model]
+        except KeyError:
+            raise ValueError(
+                f"request {req.src.rid} targets model {model!r} but the "
+                f"fleet serves {sorted(self.fleet.groups)}")
 
     # ------------------------------------------------------------------
     def _submit_prefill_work(self, tgt, kind: str, req: SimRequest, t: float):
@@ -491,24 +692,27 @@ class ClusterBase:
             tgt.submit_prefill(req, t)
 
     def _on_arrival(self, req: SimRequest, t: float):
-        self.router.burst.observe(t, req.src.in_len)
+        g = self._group_of(req)
+        g.router.burst.observe(t, req.src.in_len)
         req.bucket_pred = self.predictor.predict_bucket(
             req.src.in_len, req.src.out_len)
         self._arrivals.append((t, req))
         self._arrivals = [(ts, r) for ts, r in self._arrivals if t - ts <= 5.0]
-        is_ts = isinstance(self.policy, TokenScalePolicy)
-        burst = is_ts and self.convertibles and self.router.burst.is_burst(t)
+        is_ts = isinstance(self.policy.model_policy(g.model),
+                           TokenScalePolicy)
+        convs = g.conv_instances()
+        burst = is_ts and convs and g.router.burst.is_burst(t)
         if burst:
             # burst traffic goes straight to the Convertible Decoders (§IV-A)
-            tgt, kind = self.router.route_prefill(
-                req.src.in_len, [], self._ready(self.convertibles, t), t,
+            tgt, kind = g.router.route_prefill(
+                req.src.in_len, [], self._ready(convs, t), t,
                 priority=req.priority)
             if tgt is not None:
                 self._submit_prefill_work(tgt, "convertible", req, t)
                 return
-        tgt, kind = self.router.route_prefill(
-            req.src.in_len, self._ready(self.prefillers, t),
-            self._ready(self.convertibles, t) if is_ts else [], t,
+        tgt, kind = g.router.route_prefill(
+            req.src.in_len, self._ready(g.prefill.instances, t),
+            self._ready(convs, t) if is_ts else [], t,
             priority=req.priority)
         if kind is not None:
             self._submit_prefill_work(tgt, kind, req, t)
@@ -522,21 +726,25 @@ class ClusterBase:
     def _drain_wait_queue(self, t: float):
         """§IV-E: as load changes (scale-ups, drained convertibles), pending
         prefill tasks are re-evaluated and re-assigned — higher priority
-        classes first, FIFO within a class."""
-        is_ts = isinstance(self.policy, TokenScalePolicy)
+        classes first, FIFO within a class, each within its own model's
+        pools."""
         still = []
         for req in sorted(self.wait_queue,
                           key=lambda r: (r.priority, r.src.t, r.src.rid)):
-            tgt, kind = self.router.route_prefill(
-                req.src.in_len, self._ready(self.prefillers, t),
-                self._ready(self.convertibles, t) if is_ts else [], t,
+            g = self._group_of(req)
+            is_ts = isinstance(self.policy.model_policy(g.model),
+                               TokenScalePolicy)
+            tgt, kind = g.router.route_prefill(
+                req.src.in_len, self._ready(g.prefill.instances, t),
+                self._ready(g.conv_instances(), t) if is_ts else [], t,
                 priority=req.priority)
             if kind is not None:
                 self._submit_prefill_work(tgt, kind, req, t)
             else:
                 # work conservation: an idle prefiller always takes work,
                 # even if the SLO is already forfeited
-                idle = [p for p in self._ready(self.prefillers, t) if p.idle]
+                idle = [p for p in self._ready(g.prefill.instances, t)
+                        if p.idle]
                 if idle:
                     self._submit_prefill_work(idle[0], "prefiller", req, t)
                 else:
@@ -545,7 +753,9 @@ class ClusterBase:
 
     def _to_network(self, req: SimRequest, t: float) -> tuple[float, SimRequest]:
         req.t_prefill_end = t
-        delay = hw.kvc_transfer_time(self.cfg, self.spec, req.src.in_len)
+        g = self._group_of(req)
+        delay = hw.kvc_transfer_time(g.prefill.cfg, g.prefill.inst,
+                                     req.src.in_len)
         entry = (t + delay, req)
         self.pending_decode.append(entry)
         return entry
@@ -557,7 +767,8 @@ class ClusterBase:
         event engine).  If preemption is enabled, a request that fits
         nowhere may instead evict/pause strictly-lower-priority resident
         work (the fluid engine reaches this via its per-tick retry; the
-        event engine via exact admission events)."""
+        event engine via exact admission events).  Candidates are always
+        the request's own model's decode + convertible pools."""
         rest = []
         queue = sorted(self.pending_decode,
                        key=lambda e: (e[1].priority, e[0], e[1].src.rid))
@@ -566,9 +777,10 @@ class ClusterBase:
             if ready_t > t:
                 rest.append((ready_t, req))
                 continue
-            d = self.router.route_decode(
+            g = self._group_of(req)
+            d = g.router.route_decode(
                 req.bucket_pred,
-                [x for x in self.decoders + self.convertibles
+                [x for x in g.decode_instances()
                  if x.ready(t) and not x.draining and x.can_admit(req)])
             if d is None and self.preemption.enabled:
                 d = self._preempt_for(req, t)
@@ -592,10 +804,11 @@ class ClusterBase:
         Host choice: the decoder whose most-expendable victim has the
         lowest class; victims are evicted lowest-class-first and
         least-progress-first (least wasted work)."""
-        c = self.cost
+        g = self._group_of(req)
+        c = g.decode.cost
         need = (req.src.in_len + req.src.out_len) * c.kv_tok + c.state_fix
         best, best_key = None, None
-        for d in self.decoders + self.convertibles:
+        for d in g.decode_instances():
             if not d.ready(t) or d.draining:
                 continue
             victims = [v for v in d.active
@@ -630,11 +843,12 @@ class ClusterBase:
         d.active.remove(victim)
         victim.n_evictions += 1
         ctx = int(victim.src.in_len + victim.generated)
+        g = self._group_of(victim)
         if self.preemption.mode == "pause-requeue":
-            # KV swapped out; restored over the interconnect
-            delay = hw.kvc_transfer_time(self.cfg, self.spec, ctx)
-        else:                                # evict-lowest: KV dropped,
-            delay = ctx / max(self.prof.v_prefill, 1e-9)  # full recompute
+            # KV swapped out; restored over the decoder's own interconnect
+            delay = hw.kvc_transfer_time(g.decode.cfg, d.pool.inst, ctx)
+        else:                                # evict-lowest: KV dropped, full
+            delay = ctx / max(g.prefill.prof.v_prefill, 1e-9)  # recompute
         victim.decode_time += delay
         self.preemption_log.append(
             (t, victim.priority, preemptor.priority, victim.generated))
@@ -647,49 +861,70 @@ class ClusterBase:
         re-entry ready time."""
 
     # ------------------------------------------------------------------
-    def _observation(self, t: float) -> Observation:
+    def _fleet_observation(self, t: float) -> FleetObservation:
+        """Per-pool snapshots + per-model gateway aggregates: what the
+        metrics plane reports each interval."""
+        snaps: dict[str, PoolSnapshot] = {}
+        for name, pool in self.pools.items():
+            insts = pool.instances
+            ready = [i for i in insts if i.ready(t)]
+            snap = PoolSnapshot(name, pool.spec.role, pool.spec.model,
+                                count=len(insts), ready=len(ready))
+            if pool.spec.role == "prefill":
+                snap.queue_requests = sum(len(p.queue) for p in insts)
+                snap.inflight_tokens = sum(p.inflight_tokens()
+                                           for p in insts)
+            else:
+                snap.inflight = sum(len(d.active) for d in insts)
+                snap.inflight_tokens = sum(d.inflight_tokens()
+                                           for d in insts)
+                utils = [d.mem_util() for d in ready]
+                snap.mem_util = float(np.mean(utils)) if utils else 0.0
+            snaps[name] = snap
         win = [(ts, r) for ts, r in self._arrivals if t - ts <= 1.0]
-        tok_in = sum(r.src.in_len for _, r in win) / 1.0
-        by_bucket: dict[str, float] = {}
-        for _, r in win:
-            lam = r.src.in_len + _pred_out(r)
-            by_bucket[r.bucket_pred] = by_bucket.get(r.bucket_pred, 0) + lam
-        rps = len(win) / 1.0
-        queue = sum(len(p.queue) for p in self.prefillers) \
-            + len(self.wait_queue)
-        inflight = sum(len(d.active) for d in self.decoders
-                       + self.convertibles)
-        utils = [d.mem_util() for d in self.decoders if d.ready(t)]
-        return Observation(
-            t=t, token_rate_in=tok_in, token_rate_by_bucket=by_bucket,
-            rps=rps, prefill_queue=queue, decode_inflight=inflight,
-            mem_util=float(np.mean(utils)) if utils else 0.0,
-            cur_prefillers=len(self.prefillers),
-            cur_decoders=len(self.decoders))
+        gateway: dict[str, GatewayStats] = {}
+        for model in self.fleet.groups:
+            mwin = [r for _, r in win
+                    if (r.model or self.fleet.default_model) == model]
+            by_bucket: dict[str, float] = {}
+            for r in mwin:
+                lam = r.src.in_len + _pred_out(r)
+                by_bucket[r.bucket_pred] = by_bucket.get(r.bucket_pred, 0) \
+                    + lam
+            queued = sum(
+                1 for r in self.wait_queue
+                if (r.model or self.fleet.default_model) == model)
+            gateway[model] = GatewayStats(
+                token_rate_in=sum(r.src.in_len for r in mwin) / 1.0,
+                token_rate_by_bucket=by_bucket, rps=len(mwin) / 1.0,
+                queued=queued)
+        return FleetObservation(t=t, pools=snaps, gateway=gateway)
+
+    def _observation(self, t: float) -> Observation:
+        """Legacy flat snapshot of the default model group."""
+        return flat_observation(self.fleet.default_model,
+                                self._fleet_observation(t))
 
     def _scale(self, t: float):
-        obs = self._observation(t)
-        dec = self.policy.decide(obs)
-        startup = 0.0 if dec.live else self.spec.chip.startup_s
-        cap = self.max_instances
-        # prefillers
-        want_p = min(dec.prefillers, cap)
-        while len(self.prefillers) < want_p:
-            self.prefillers.append(self._new_prefiller(t + startup))
-        while len(self.prefillers) > max(want_p, 1):
-            idle = [p for p in self.prefillers if p.idle]
-            if not idle:
-                break
-            self.prefillers.remove(idle[-1])
-        # decoders (regular pool only; convertibles are fixed, §IV-C2)
-        want_d = min(dec.decoders, cap)
-        while len(self.decoders) < want_d:
-            self.decoders.append(self._new_decoder(t + startup))
-        while len(self.decoders) > max(want_d, 1):
-            idle = [d for d in self.decoders if d.idle]
-            if not idle:
-                break
-            self.decoders.remove(idle[-1])
+        """Execute the policy's ``FleetPlan`` pool by pool, in declaration
+        order.  Convertible pools are fixed (§IV-C2) and pools the plan
+        does not target are left alone; scale-down only ever removes idle
+        instances and respects the pool's ``min`` floor."""
+        obs = self._fleet_observation(t)
+        plan = self.policy.plan(obs)
+        for name, pool in self.pools.items():
+            if pool.spec.role == "convertible" or name not in plan.targets:
+                continue
+            startup = 0.0 if name in plan.live \
+                else pool.inst.chip.startup_s
+            want = min(plan.targets[name], self.max_instances)
+            while len(pool.instances) < want:
+                pool.instances.append(self._spawn(pool, t + startup))
+            while len(pool.instances) > max(want, pool.spec.min):
+                idle = [i for i in pool.instances if i.idle]
+                if not idle:
+                    break
+                pool.instances.remove(idle[-1])
         self._after_scale(t)
 
     def _after_scale(self, t: float):
@@ -699,10 +934,10 @@ class ClusterBase:
     def _gpu_count(self, t: float) -> int:
         """Billing: every *provisioned* instance — booting or ready — burns
         GPUs; instances removed by scale-down stop billing because they
-        leave the fleet lists."""
+        leave their pool."""
         del t
-        return sum(i.spec.gpus for i in
-                   self.prefillers + self.decoders + self.convertibles)
+        return sum(i.spec.gpus for pool in self.pools.values()
+                   for i in pool.instances)
 
     def _unfinished(self):
         out = []
@@ -716,16 +951,19 @@ class ClusterBase:
         return out
 
     def _snapshot(self, t: float) -> dict:
+        prefillers, decoders = self.prefillers, self.decoders
         return {
             "t": t,
-            "prefillers": len(self.prefillers),
-            "decoders": len(self.decoders),
+            "prefillers": len(prefillers),
+            "decoders": len(decoders),
             "convertibles": len(self.convertibles),
-            "queue": sum(len(p.queue) for p in self.prefillers),
+            "queue": sum(len(p.queue) for p in prefillers),
             "inflight": sum(len(d.active)
-                            for d in self.decoders + self.convertibles),
-            "mem_util": float(np.mean([d.mem_util() for d in self.decoders]))
-            if self.decoders else 0.0,
+                            for d in decoders + self.convertibles),
+            "mem_util": float(np.mean([d.mem_util() for d in decoders]))
+            if decoders else 0.0,
+            "pools": {name: len(pool.instances)
+                      for name, pool in self.pools.items()},
         }
 
     def _report(self, t_end: float) -> SimReport:

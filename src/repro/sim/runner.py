@@ -1,21 +1,40 @@
-"""Experiment runner: build (cluster, policy) pairs the way §V configures
-them and produce the paper's comparison numbers."""
+"""Experiment runner: execute a declarative ``ExperimentSpec`` (fleet +
+trace routing + policy + engine + preemption) end-to-end, the way §V
+configures its experiments.
+
+``run_spec`` is the single entry point: it resolves the spec's pools into
+runtime ``Fleet`` objects (velocity profile per (model, chip, tp) pool,
+Eq. 5-6 convertible plan per convertible pool), generates one trace per
+model route, builds the policy per model group through the string-keyed
+registry (``core.autoscaler.build_policy``), and drives either engine.
+Heterogeneous fleets (mixed chips/TP across pools) and multi-model
+serving are just specs; the legacy single-pool helpers ``run_policy`` /
+``make_policy`` survive as thin shims over one-pool specs and remain
+byte-stable with the pre-pool control plane (the golden fixtures enforce
+this).
+"""
 from __future__ import annotations
 
 from typing import Optional
 
 from repro.configs import get_config
-from repro.core import (AIBrixPolicy, BlitzScalePolicy, DistServePolicy,
-                        InstanceSpec, OutputPredictor, TokenScalePolicy,
-                        plan_convertible, profile)
-from repro.core.hardware import CHIPS
+from repro.core import (CHIPS, ExperimentSpec, InstanceSpec, OutputPredictor,
+                        PerModelFleetPolicy, build_policy,
+                        default_convertible_plan, profile_for,
+                        single_pool_fleet)
+from repro.core.fleet import FleetSpec, PoolSpec, TraceRoute
 from repro.core.velocity import VelocityProfile
 from repro.sim.cluster import Cluster, SimReport
 from repro.sim.events import EventCluster
-from repro.sim.traces import get_trace
+from repro.sim.instances import Fleet, Pool
+from repro.sim.traces import TraceRequest, get_trace, trace_stats
 
 #: engine name -> cluster class; both drive the identical control plane.
 ENGINES = {"fluid": Cluster, "events": EventCluster}
+
+#: seed decorrelation between a spec's model routes (route 0 keeps the
+#: spec seed verbatim so one-route specs reproduce legacy traces exactly)
+_ROUTE_SEED_STRIDE = 7919
 
 
 def get_engine(name: str):
@@ -26,34 +45,127 @@ def get_engine(name: str):
             f"unknown engine {name!r}; expected one of {sorted(ENGINES)}")
 
 
+# ---------------------------------------------------------------------------
+# Spec resolution
+# ---------------------------------------------------------------------------
+
+def build_fleet(fs: FleetSpec,
+                profiles: Optional[dict[str, VelocityProfile]] = None
+                ) -> Fleet:
+    """Resolve a declarative ``FleetSpec`` into a runtime ``Fleet``: each
+    pool gets its own model config, instance spec, (cached) velocity
+    profile, and — for convertible pools — an Eq. 5-6 restriction planned
+    against that pool's own hardware.  ``profiles`` overrides profiling
+    per pool name (e.g. the int8-KV what-if in ``benchmarks.run.kv8``)."""
+    pools = []
+    for ps in fs.pools:
+        cfg = get_config(ps.model)
+        inst = InstanceSpec(CHIPS[ps.chip], tp=ps.tp)
+        prof = (profiles or {}).get(ps.name) \
+            or profile_for(ps.model, ps.chip, ps.tp)
+        conv = default_convertible_plan(cfg, inst, prof) \
+            if ps.role == "convertible" else None
+        pools.append(Pool(ps, cfg, inst, prof, conv_cfg=conv))
+    return Fleet(pools)
+
+
+def build_traces(spec: ExperimentSpec) -> list[TraceRequest]:
+    """One trace per model route, each request tagged with its model.
+    Route 0 uses the spec seed verbatim (single-route specs reproduce the
+    legacy ``run_policy`` arrivals byte-for-byte); later routes draw from
+    decorrelated seed streams.  Multi-route traces are merged by arrival
+    time and renumbered like the paper's Mixed workload."""
+    if not spec.fleet.routes:
+        raise ValueError("ExperimentSpec needs at least one TraceRoute")
+    parts = []
+    for i, route in enumerate(spec.fleet.routes):
+        part = get_trace(route.trace, spec.duration, route.rps,
+                         spec.seed + _ROUTE_SEED_STRIDE * i,
+                         priority_mix=route.priority_mix)
+        for r in part:
+            r.model = route.model
+        parts.append(part)
+    if len(parts) == 1:
+        return parts[0]
+    merged = [r for part in parts for r in part]
+    merged.sort(key=lambda r: r.t)
+    for i, r in enumerate(merged):
+        r.rid = i
+    return merged
+
+
+def run_spec(spec: ExperimentSpec,
+             profiles: Optional[dict[str, VelocityProfile]] = None
+             ) -> SimReport:
+    """The pool-centric entry point: heterogeneous fleets and multi-model
+    serving run end-to-end on either engine from one declarative spec."""
+    fleet = build_fleet(spec.fleet, profiles)
+    trace = build_traces(spec)
+    policies = {}
+    for model, g in fleet.groups.items():
+        stats = trace_stats(
+            [r for r in trace
+             if (r.model or fleet.default_model) == model])
+        policies[model] = build_policy(
+            spec.policy, g.prefill.prof, decode_prof=g.decode.prof,
+            mean_in=stats.mean_in, mean_out=stats.mean_out,
+            n_convertible=g.convertible.spec.init if g.convertible else 0,
+            **spec.policy_options)
+    cl = get_engine(spec.engine)(
+        fleet, policy=PerModelFleetPolicy(policies),
+        predictor=OutputPredictor(spec.predictor_accuracy, spec.seed),
+        dt=spec.dt, preemption=spec.preemption,
+        max_instances=spec.max_instances)
+    return cl.run(trace, spec.duration + spec.extra_horizon)
+
+
+def hetero_demo_spec(duration: float = 30.0, rps: float = 6.0,
+                     seed: int = 0, engine: str = "fluid",
+                     policy: str = "tokenscale") -> ExperimentSpec:
+    """The canonical heterogeneous-fleet scenario (shared by the smoke
+    bench, the golden fixture regenerator, and the differential tests):
+    a100-TP2 prefillers feed h100-TP1 decoders plus one h100 Convertible
+    Decoder — prefill and decode pools with different chips, TP degrees,
+    and therefore different Token Velocities."""
+    return ExperimentSpec(
+        fleet=FleetSpec(
+            pools=(
+                PoolSpec("pre-a100", "prefill", "llama31_8b", "a100", tp=2),
+                PoolSpec("dec-h100", "decode", "llama31_8b", "h100", tp=1),
+                PoolSpec("conv-h100", "convertible", "llama31_8b", "h100",
+                         tp=1, init=1),
+            ),
+            routes=(TraceRoute("llama31_8b", "azure_conv", rps=rps),)),
+        policy=policy, engine=engine, duration=duration, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Legacy single-pool shims (thin wrappers over one-pool specs)
+# ---------------------------------------------------------------------------
+
 def make_policy(name: str, prof: VelocityProfile, n_convertible: int = 1,
-                mean_in: float = 1024.0, mean_out: float = 240.0):
-    """§V Baselines.  Threshold derivations follow Table I's recipes:
-    request-based thresholds = stage capacity / mean request size, with the
-    safety factors the respective papers use (which is exactly why they
-    overprovision after bursts, §VI-A)."""
-    if name == "tokenscale":
-        return TokenScalePolicy(prof, convertible=n_convertible)
-    if name == "distserve":
-        # "uses a simulator to determine scaling thresholds" — capacity/size
-        # with a 0.7 safety factor
-        return DistServePolicy(
-            rps_per_prefiller=max(0.7 * prof.v_prefill / mean_in, 0.5),
-            rps_per_decoder=max(
-                0.5 * prof.v_decode_mean() / (mean_in + mean_out), 0.5))
-    if name == "aibrix":
-        # Table I: concurrency threshold = max prefill throughput / average
-        # prefill length (in requests); decoder fixed at 70% memory util
-        return AIBrixPolicy(
-            conc_per_prefiller=max(prof.v_prefill / mean_in * 0.5, 1.0),
-            mem_util_target=0.7)
-    if name == "blitzscale":
-        # Table I: prefiller = avg prefill length / max prefill throughput;
-        # decoder = available KVC memory / per-request footprint
-        return BlitzScalePolicy(
-            req_per_prefiller=max(prof.v_prefill / mean_in * 0.5, 1.0),
-            req_per_decoder=max(prof.max_batch.get("M-M", 45) * 0.6, 4.0))
-    raise ValueError(name)
+                mean_in: Optional[float] = None,
+                mean_out: Optional[float] = None,
+                trace: Optional[list[TraceRequest]] = None):
+    """§V Baselines, via the policy registry.  Threshold derivations
+    follow Table I's recipes: request-based thresholds = stage capacity /
+    mean request size, with the safety factors the respective papers use
+    (which is exactly why they overprovision after bursts, §VI-A).
+
+    ``mean_in``/``mean_out`` must come from the *actual* workload — pass
+    them explicitly or pass ``trace=`` to derive them here
+    (``sim.traces.trace_stats``); the historical hardcoded 1024/240
+    defaults mis-calibrated baselines on skewed traces."""
+    if trace is not None:
+        stats = trace_stats(trace)
+        mean_in = stats.mean_in if mean_in is None else mean_in
+        mean_out = stats.mean_out if mean_out is None else mean_out
+    if mean_in is None or mean_out is None:
+        raise ValueError(
+            "make_policy needs the workload's request-size stats: pass "
+            "mean_in/mean_out or trace= (see sim.traces.trace_stats)")
+    return build_policy(name, prof, decode_prof=prof, mean_in=mean_in,
+                        mean_out=mean_out, n_convertible=n_convertible)
 
 
 def run_policy(policy_name: str, trace_name: str = "mixed",
@@ -66,26 +178,18 @@ def run_policy(policy_name: str, trace_name: str = "mixed",
                preemption: str = "none",
                priority_mix: Optional[dict] = None,
                max_instances: int = 64) -> SimReport:
-    cfg = get_config(model)
-    inst = InstanceSpec(CHIPS[chip], tp=tp)
-    prof = prof or profile(cfg, inst)
-    trace = get_trace(trace_name, duration, rps, seed,
-                      priority_mix=priority_mix)
-    mean_in = (sum(r.in_len for r in trace) / max(len(trace), 1)) or 1024.0
-    mean_out = (sum(r.out_len for r in trace) / max(len(trace), 1)) or 240.0
-    policy = make_policy(policy_name, prof, n_convertible, mean_in, mean_out)
-    conv_cfg = plan_convertible(
-        cfg, inst, expected_decode_batch=max(
-            prof.max_batch.get("M-M", 16) // 2, 1),
-        avg_ctx=1200.0, burst_ratio=0.2, max_decoders=8)
+    """The classic single-pool experiment, desugared to a one-pool spec.
+    Kept byte-stable with the pre-pool control plane (golden fixtures)."""
     n_conv = n_convertible if policy_name == "tokenscale" else 0
-    cl = get_engine(engine)(
-        cfg, inst, prof, policy,
-        predictor=OutputPredictor(predictor_accuracy, seed),
-        conv_cfg=conv_cfg, n_convertible=n_conv, dt=dt,
-        preemption=preemption, max_instances=max_instances)
-    rep = cl.run(trace, duration + 30.0)
-    return rep
+    fleet_spec = single_pool_fleet(model, chip, tp, trace=trace_name,
+                                   rps=rps, n_convertible=n_conv,
+                                   priority_mix=priority_mix)
+    spec = ExperimentSpec(
+        fleet=fleet_spec, policy=policy_name, engine=engine,
+        preemption=preemption, duration=duration, seed=seed, dt=dt,
+        predictor_accuracy=predictor_accuracy, max_instances=max_instances)
+    profiles = {p.name: prof for p in fleet_spec.pools} if prof else None
+    return run_spec(spec, profiles=profiles)
 
 
 def compare_policies(trace_name: str = "mixed", model: str = "llama31_8b",
@@ -93,9 +197,7 @@ def compare_policies(trace_name: str = "mixed", model: str = "llama31_8b",
                      duration: float = 120.0, rps: float = 8.0,
                      seed: int = 0,
                      engine: str = "fluid") -> dict[str, SimReport]:
-    cfg = get_config(model)
-    inst = InstanceSpec(CHIPS[chip], tp=tp)
-    prof = profile(cfg, inst)
+    prof = profile_for(model, chip, tp)
     out = {}
     for name in ["tokenscale", "distserve", "aibrix", "blitzscale"]:
         out[name] = run_policy(name, trace_name, model, chip, tp,

@@ -37,6 +37,31 @@ class TraceRequest:
     in_len: int
     out_len: int
     priority: int = 1          # PRIORITY_CLASSES["standard"]
+    model: str = ""            # "" = the fleet's default model; multi-model
+                               # fleets tag each request with its route's
+                               # model (core.fleet.TraceRoute)
+
+
+@dataclass(frozen=True)
+class TraceStats:
+    """Request-size statistics of an actual trace — what the baseline
+    policies' Table I threshold derivations must be calibrated from
+    (hardcoded means mis-calibrate them on skewed traces)."""
+    mean_in: float
+    mean_out: float
+    n: int
+
+
+def trace_stats(reqs: list[TraceRequest],
+                default_in: float = 1024.0,
+                default_out: float = 240.0) -> TraceStats:
+    """Mean prompt/output lengths of ``reqs`` (falling back to the
+    historical Table II-ish defaults only for an empty trace)."""
+    mean_in = (sum(r.in_len for r in reqs) / max(len(reqs), 1)) \
+        or default_in
+    mean_out = (sum(r.out_len for r in reqs) / max(len(reqs), 1)) \
+        or default_out
+    return TraceStats(mean_in=mean_in, mean_out=mean_out, n=len(reqs))
 
 
 @dataclass(frozen=True)

@@ -207,7 +207,10 @@ def test_gpu_seconds_integrate_fleet_exactly(engine_cls, cfg, inst, prof):
 def test_booting_instances_are_billed(cfg, inst, prof):
     cl = Cluster(cfg, inst, prof, TokenScalePolicy(prof, convertible=0),
                  n_convertible=0, init_prefillers=1, init_decoders=1)
-    cl.decoders.append(cl._new_decoder(ready_t=5.0))   # boots until t=5
+    # fleet mutation goes through the pool's live list (the decoders
+    # property is a flattened read-only view)
+    pool = cl.pools["decode"].instances
+    pool.append(cl._new_decoder(ready_t=5.0))          # boots until t=5
     assert cl._gpu_count(0.0) == 3 * inst.gpus         # booting is billed
-    cl.decoders.pop()
+    pool.pop()
     assert cl._gpu_count(0.0) == 2 * inst.gpus         # removed is not

@@ -1,0 +1,240 @@
+"""Pool-centric control-plane API: specs, registry, heterogeneous fleets,
+multi-model serving.
+
+Covers the four contract points of the redesign:
+  * ``ExperimentSpec`` round-trips through JSON (including int-keyed
+    priority mixes, which JSON stringifies);
+  * the policy registry rejects unknown names with the registered set;
+  * a heterogeneous two-pool fleet (mixed chips/TP) agrees between the
+    fluid and event engines within the existing 15% differential band;
+  * a two-model fleet produces per-model SLO accounting in ``SimReport``
+    and per-pool scaling decisions in the timeline.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (ExperimentSpec, FleetSpec, PoolSpec, TraceRoute,
+                        build_policy, profile_for)
+from repro.core.autoscaler import POLICY_REGISTRY
+from repro.sim.runner import hetero_demo_spec, run_policy, run_spec
+from repro.sim.traces import get_trace, trace_stats
+
+REL_TOL = 0.15          # same band as tests/test_sim_differential.py
+ABS_TTFT = 0.020
+ABS_TPOT = 0.005
+
+
+def _close(a, b, rel, abs_tol=0.0):
+    return abs(a - b) <= max(rel * max(abs(a), abs(b)), abs_tol)
+
+
+def two_model_spec(engine="fluid"):
+    return ExperimentSpec(
+        fleet=FleetSpec(
+            pools=(
+                PoolSpec("llama-pre", "prefill", "llama31_8b", "a100"),
+                PoolSpec("llama-dec", "decode", "llama31_8b", "a100"),
+                PoolSpec("qwen-pre", "prefill", "qwen25_32b", "a100", tp=4),
+                PoolSpec("qwen-dec", "decode", "qwen25_32b", "a100", tp=4),
+            ),
+            routes=(
+                TraceRoute("llama31_8b", "azure_conv", rps=5.0,
+                           priority_mix={0: 0.3, 1: 0.7}),
+                TraceRoute("qwen25_32b", "azure_code", rps=3.0),
+            )),
+        policy="tokenscale", engine=engine, duration=25.0, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# ExperimentSpec: JSON round trip + validation
+# ---------------------------------------------------------------------------
+
+def test_spec_json_round_trip():
+    spec = two_model_spec()
+    again = ExperimentSpec.from_json(spec.to_json())
+    assert again == spec
+    # int priority-class keys survive JSON's string keys
+    assert again.fleet.routes[0].priority_mix == {0: 0.3, 1: 0.7}
+
+
+def test_spec_round_trip_via_file(tmp_path):
+    path = tmp_path / "exp.json"
+    spec = hetero_demo_spec()
+    path.write_text(spec.to_json())
+    assert ExperimentSpec.load(str(path)) == spec
+
+
+def test_fleet_spec_validation():
+    with pytest.raises(ValueError, match="unknown role"):
+        PoolSpec("p", "prefiller")
+    with pytest.raises(ValueError, match="duplicate pool names"):
+        FleetSpec((PoolSpec("p", "prefill"), PoolSpec("p", "decode")))
+    with pytest.raises(ValueError, match="exactly one prefill"):
+        FleetSpec((PoolSpec("p", "prefill"),))          # no decode pool
+    with pytest.raises(ValueError, match="unknown model"):
+        FleetSpec((PoolSpec("p", "prefill"), PoolSpec("d", "decode")),
+                  (TraceRoute("qwen25_32b"),))
+
+
+def test_run_spec_needs_a_route():
+    spec = ExperimentSpec(fleet=FleetSpec(
+        (PoolSpec("p", "prefill"), PoolSpec("d", "decode"))), duration=5.0)
+    with pytest.raises(ValueError, match="TraceRoute"):
+        run_spec(spec)
+
+
+# ---------------------------------------------------------------------------
+# Policy registry
+# ---------------------------------------------------------------------------
+
+def test_registry_has_all_four_policies():
+    assert {"tokenscale", "distserve", "aibrix",
+            "blitzscale"} <= set(POLICY_REGISTRY)
+
+
+def test_registry_unknown_name_error():
+    prof = profile_for("llama31_8b", "a100", 1)
+    with pytest.raises(ValueError) as ei:
+        build_policy("k8s-hpa", prof, mean_in=512.0, mean_out=128.0)
+    # the error names the registered policies so typos are self-diagnosing
+    assert "k8s-hpa" in str(ei.value)
+    assert "tokenscale" in str(ei.value)
+
+
+def test_make_policy_requires_workload_stats():
+    from repro.sim.runner import make_policy
+    prof = profile_for("llama31_8b", "a100", 1)
+    with pytest.raises(ValueError, match="mean_in"):
+        make_policy("distserve", prof)       # no stats, no trace
+    trace = get_trace("azure_code", 30.0, 6.0, seed=0)
+    stats = trace_stats(trace)
+    pol = make_policy("distserve", prof, trace=trace)
+    # thresholds derive from the actual (code-heavy, long-prompt) trace,
+    # not the historical hardcoded 1024/240
+    expect = max(0.7 * prof.v_prefill / stats.mean_in, 0.5)
+    assert pol.rp == pytest.approx(expect)
+    assert stats.mean_in > 1200.0            # azure_code is prompt-heavy
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous fleet: both engines, same control plane
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def hetero_reports():
+    """Both engines on the mixed-chip fleet.  As in
+    tests/test_sim_differential.py, the fluid engine runs at half its
+    default tick: it converges toward the event engine as dt -> 0 and
+    the default 25 ms leaves ~1.5 ticks of TTFT smearing."""
+    import dataclasses
+    out = {}
+    for eng in ("fluid", "events"):
+        spec = hetero_demo_spec(duration=30.0, rps=6.0, engine=eng)
+        if eng == "fluid":
+            spec = dataclasses.replace(spec, dt=0.0125)
+        out[eng] = run_spec(spec)
+    return out
+
+def test_hetero_engines_agree(hetero_reports):
+    fl, ev = hetero_reports["fluid"], hetero_reports["events"]
+    assert len(fl.requests) == len(ev.requests)      # same arrivals
+    assert _close(fl.throughput(), ev.throughput(), REL_TOL, 0.1)
+    assert _close(fl.mean("ttft"), ev.mean("ttft"), REL_TOL, ABS_TTFT)
+    assert _close(fl.mean("tpot"), ev.mean("tpot"), REL_TOL, ABS_TPOT)
+    assert _close(fl.avg_gpus(), ev.avg_gpus(), 0.25, 1.0)
+
+
+def test_hetero_pools_actually_differ(hetero_reports):
+    """The point of the fleet: prefill and decode pools run different
+    (chip, tp) tuples, with per-pool velocity profiles and per-pool
+    scaling decisions recorded in the timeline."""
+    rep = hetero_reports["events"]
+    pools = rep.timeline[-1]["pools"]
+    assert set(pools) == {"pre-a100", "dec-h100", "conv-h100"}
+    pre = profile_for("llama31_8b", "a100", 2)
+    dec = profile_for("llama31_8b", "h100", 1)
+    assert pre.v_prefill != dec.v_prefill            # genuinely mixed
+    assert rep.slo_attainment() > 0.7
+
+
+def test_hetero_serves_requests(hetero_reports):
+    for rep in hetero_reports.values():
+        done = sum(1 for r in rep.requests if r.t_finish >= 0)
+        assert done > 0.8 * len(rep.requests)
+
+
+# ---------------------------------------------------------------------------
+# Multi-model serving: per-model SLO accounting
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mm_reports():
+    import dataclasses
+    out = {}
+    for eng in ("fluid", "events"):
+        spec = two_model_spec(engine=eng)
+        if eng == "fluid":          # half tick, as in hetero_reports
+            spec = dataclasses.replace(spec, dt=0.0125)
+        out[eng] = run_spec(spec)
+    return out
+
+
+def test_multi_model_slicing(mm_reports):
+    for eng, rep in mm_reports.items():
+        assert rep.models() == ["llama31_8b", "qwen25_32b"], eng
+        per_model = [rep.model_summary(m) for m in rep.models()]
+        # slices partition the request set
+        assert sum(s["n"] for s in per_model) == len(rep.requests)
+        for s in per_model:
+            assert s["n"] > 0
+            assert 0.0 <= s["slo_attainment"] <= 1.0
+        # throughput decomposes across models
+        assert sum(s["throughput"] for s in per_model) == \
+            pytest.approx(rep.throughput())
+
+
+def test_multi_model_isolated_pools(mm_reports):
+    """Each model's requests decode only on its own pools: per-pool
+    scaling is per model, and the qwen route never inflates llama's
+    fleet."""
+    rep = mm_reports["fluid"]
+    pools = rep.timeline[-1]["pools"]
+    assert set(pools) == {"llama-pre", "llama-dec", "qwen-pre", "qwen-dec"}
+    # priority mix only applied to the llama route
+    llama = [r for r in rep.requests if r.model == "llama31_8b"]
+    qwen = [r for r in rep.requests if r.model == "qwen25_32b"]
+    assert {r.priority for r in llama} == {0, 1}
+    assert {r.priority for r in qwen} == {1}
+
+
+def test_multi_model_engines_agree(mm_reports):
+    fl, ev = mm_reports["fluid"], mm_reports["events"]
+    assert len(fl.requests) == len(ev.requests)
+    for m in fl.models():
+        assert _close(fl.throughput(model=m), ev.throughput(model=m),
+                      REL_TOL, 0.1), m
+        assert _close(fl.mean("ttft", model=m), ev.mean("ttft", model=m),
+                      REL_TOL, ABS_TTFT), m
+
+
+# ---------------------------------------------------------------------------
+# Shim equivalence: run_policy is a one-pool spec
+# ---------------------------------------------------------------------------
+
+def test_run_policy_equals_run_spec():
+    """The legacy entry point and the equivalent one-pool spec produce
+    identical per-request timestamps — the shim adds nothing."""
+    from repro.core import single_pool_fleet
+    legacy = run_policy("distserve", "azure_conv", duration=20.0, rps=6.0,
+                        seed=0, engine="events")
+    spec = ExperimentSpec(
+        fleet=single_pool_fleet("llama31_8b", "a100", 1,
+                                trace="azure_conv", rps=6.0),
+        policy="distserve", engine="events", duration=20.0, seed=0)
+    direct = run_spec(spec)
+    assert len(legacy.requests) == len(direct.requests)
+    la = sorted(legacy.requests, key=lambda r: r.src.rid)
+    di = sorted(direct.requests, key=lambda r: r.src.rid)
+    assert [r.t_finish for r in la] == [r.t_finish for r in di]
+    assert [r.t_first_token for r in la] == [r.t_first_token for r in di]
+    assert legacy.gpu_seconds == direct.gpu_seconds

@@ -1,15 +1,19 @@
 """Golden-policy regression: catches silent control-plane regressions.
 
-Two fixed-seed fixtures are replayed through both engines and must match
-stored golden values within 5%:
+Three fixed-seed fixtures are replayed through both engines and must
+match stored golden values within 5%:
 
-  * ``tokenscale_azure_conv.json`` — a short azure_conv burst trace;
-    TokenScale must also keep its SLO lead over every baseline;
+  * ``tokenscale_azure_conv.json`` — a short azure_conv burst trace
+    through the legacy single-pool shim; TokenScale must also keep its
+    SLO lead over every baseline;
   * ``priority_preemption_burstgpt2.json`` — the contended tails-bench
     fleet (qwen25-32B TP2, 2-instance cap, evict-lowest) with per-
-    priority-class attainment and p99 tails.
+    priority-class attainment and p99 tails;
+  * ``hetero_fleet.json`` — the canonical heterogeneous fleet (a100-TP2
+    prefill -> h100-TP1 decode), replayed through the declarative path
+    (``ExperimentSpec.from_dict`` -> ``run_spec``).
 
-If a future PR changes control-plane behavior on purpose, regenerate both
+If a future PR changes control-plane behavior on purpose, regenerate all
 with ``PYTHONPATH=src python scripts/regen_golden.py`` and review the
 JSON diff.
 """
@@ -18,7 +22,8 @@ import os
 
 import pytest
 
-from repro.sim.runner import run_policy
+from repro.core import ExperimentSpec
+from repro.sim.runner import run_policy, run_spec
 from repro.sim.traces import DEFAULT_PRIORITY_MIX
 
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
@@ -26,6 +31,7 @@ GOLDEN = json.load(open(os.path.join(GOLDEN_DIR,
                                      "tokenscale_azure_conv.json")))
 GOLDEN_PRIO = json.load(open(os.path.join(
     GOLDEN_DIR, "priority_preemption_burstgpt2.json")))
+GOLDEN_HET = json.load(open(os.path.join(GOLDEN_DIR, "hetero_fleet.json")))
 BASELINES = ["distserve", "aibrix", "blitzscale"]
 
 
@@ -101,3 +107,21 @@ def test_priority_gradient_holds(priority_reports, engine):
     p99 = [rep.percentile("ttft", 99, priority=c)
            for c in rep.priority_classes()]
     assert p99 == sorted(p99)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous-fleet golden (declarative ExperimentSpec path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", list(GOLDEN_HET["engines"]))
+def test_hetero_fleet_matches_golden(engine):
+    """The recorded spec JSON replays through ExperimentSpec.from_dict ->
+    run_spec, so this regression also covers the declarative pipeline."""
+    spec = ExperimentSpec.from_dict({**GOLDEN_HET["spec"],
+                                     "engine": engine})
+    got = run_spec(spec).summary()
+    want = GOLDEN_HET["engines"][engine]
+    assert set(got) == set(want), engine
+    for key, expect in want.items():
+        assert got[key] == pytest.approx(expect, rel=0.05), \
+            (engine, key, got[key], expect)
