@@ -498,6 +498,72 @@ def tails():
                      len(rep.preemptions))
 
 
+#: the kvtiers contention fleet: qwen25-32B TP2 on A100-40G (2-instance
+#: cap) over azure_code — long prompts make a KV recomputation (~2.7K
+#: tokens at prefill velocity, plus the prefill backlog the burst itself
+#: created) far more expensive than a host-DRAM swap-in at PCIe bandwidth,
+#: which is exactly the gap the tiered subsystem exists to expose.
+KVTIERS_CFG = dict(model="qwen25_32b", tp=2, duration=30.0, rps=7.0,
+                   seed=0, max_instances=2)
+KVTIERS_TRACE = "azure_code"
+KVTIERS_BLOCK = 16
+KVTIERS_SESSIONS = 0.5
+
+#: variant -> (preemption mode, prefix_cache); all run the paged
+#: allocator so the comparison isolates the *policy*, not the accounting
+KVTIERS_VARIANTS = {
+    "none": ("none", False),
+    "recompute": ("evict-lowest", False),
+    "swap": ("pause-requeue", False),
+    "swap+prefix": ("pause-requeue", True),
+}
+
+
+def run_kvtiers_variant(variant: str, duration: float = None,
+                        engine: str = "events"):
+    """One kvtiers bench cell (shared with the golden regenerator and the
+    smoke row, so the fixture and the bench can never drift apart)."""
+    from repro.sim.traces import DEFAULT_PRIORITY_MIX
+    mode, prefix = KVTIERS_VARIANTS[variant]
+    cfg = dict(KVTIERS_CFG)
+    if duration is not None:
+        cfg["duration"] = duration
+    return run_policy("tokenscale", KVTIERS_TRACE, engine=engine,
+                      preemption=mode, priority_mix=DEFAULT_PRIORITY_MIX,
+                      session_prob=KVTIERS_SESSIONS,
+                      block_size=KVTIERS_BLOCK, prefix_cache=prefix, **cfg)
+
+
+def kvtiers():
+    """Tiered-KV ablation on the memory-tight fleet over a session-style
+    trace: none / recompute (evict-lowest) / swap (pause-requeue into the
+    host-DRAM tier) / swap+prefix (adding copy-on-write prefix reuse).
+    Swap must strictly improve the preempted-request p99 TTFT/TPOT over
+    recompute, and prefix reuse must cut the prefill-token load (the
+    acceptance rows; pinned by tests/golden/kvtiers_session.json).  Always
+    runs the event engine — swap completions are exact events there, which
+    is the fidelity this bench exists to measure."""
+    for variant in KVTIERS_VARIANTS:
+        rep = run_kvtiers_variant(variant)
+        ks = rep.kv_summary()
+        pre = f"{KVTIERS_TRACE},{variant}"
+        emit("kvtiers", f"{pre},preemptions", len(rep.preemptions))
+        emit("kvtiers", f"{pre},preempted_ttft_p99_ms",
+             1e3 * ks["preempted_ttft_p99"])
+        emit("kvtiers", f"{pre},preempted_tpot_p99_ms",
+             1e3 * ks["preempted_tpot_p99"])
+        emit("kvtiers", f"{pre},slo_pct", 100 * rep.slo_attainment())
+        emit("kvtiers", f"{pre},prefill_tokens",
+             sum(r.src.in_len - r.kv_hit_tokens for r in rep.requests))
+        emit("kvtiers", f"{pre},prefix_hit_rate_pct",
+             100 * ks["prefix_hit_rate"])
+        emit("kvtiers", f"{pre},offload_mb", ks["offload_bytes"] / 1e6)
+        emit("kvtiers", f"{pre},swap_outs", ks["swap_outs"])
+        emit("kvtiers", f"{pre},swap_fallbacks", ks["swap_fallbacks"])
+        emit("kvtiers", f"{pre},swap_stall_ms", 1e3 * ks["swap_stall_s"])
+        emit("kvtiers", f"{pre},peak_blocks_frac", ks["peak_blocks_frac"])
+
+
 def hetero():
     """Heterogeneous fleet (a100-TP2 prefill + h100-TP1 decode pools) and
     a two-model cluster, each through both engines via the same
@@ -533,10 +599,11 @@ def hetero():
 
 
 def smoke():
-    """~10 s sanity pass for scripts/check.sh: one small config through
+    """~15 s sanity pass for scripts/check.sh: one small config through
     both engines, a tails smoke row (priority classes + preemption
-    through the event engine), and a heterogeneous-fleet row (mixed
-    chips/TP through run_spec)."""
+    through the event engine), a heterogeneous-fleet row (mixed chips/TP
+    through run_spec), and a kvtiers row (paged KV + host-DRAM swap +
+    prefix reuse on the contended fleet)."""
     from repro.sim.traces import DEFAULT_PRIORITY_MIX
     for eng in ["fluid", "events"]:
         rep = run_policy("tokenscale", "azure_conv", duration=20.0, rps=6.0,
@@ -558,6 +625,13 @@ def smoke():
     emit("smoke", "hetero,requests", len(rep.requests))
     emit("smoke", "hetero,slo_pct", 100 * rep.slo_attainment())
     emit("smoke", "hetero,avg_gpus", rep.avg_gpus())
+    rep = run_kvtiers_variant("swap+prefix", duration=22.0)
+    ks = rep.kv_summary()
+    emit("smoke", "kvtiers,preemptions", len(rep.preemptions))
+    emit("smoke", "kvtiers,swap_outs", ks["swap_outs"])
+    emit("smoke", "kvtiers,prefix_hit_rate_pct",
+         100 * ks["prefix_hit_rate"])
+    emit("smoke", "kvtiers,peak_blocks_frac", ks["peak_blocks_frac"])
 
 
 def run_spec_files(paths: list[str]):
@@ -595,6 +669,7 @@ BENCHES = {
     "multipod": multipod_scaling,
     "diffval": diffval,
     "tails": tails,
+    "kvtiers": kvtiers,
     "hetero": hetero,
     "smoke": smoke,
 }

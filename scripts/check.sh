@@ -16,7 +16,10 @@ if [[ "${1:-}" == "--slow" ]]; then
     python -m pytest -x -q -m slow
 fi
 
-echo "== benchmark smoke (both sim engines + tails/preemption + hetero fleet rows) =="
+echo "== benchmark smoke (both sim engines + tails/preemption + hetero fleet + kvtiers rows) =="
 python -m benchmarks.run --bench=smoke
+
+echo "== golden fixtures reproduce byte-identically (regen dry run) =="
+python scripts/regen_golden.py --check
 
 echo "OK: all checks passed"

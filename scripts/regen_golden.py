@@ -1,17 +1,29 @@
 """Regenerate the golden-policy regression fixtures (tests/golden/).
 
-    PYTHONPATH=src python scripts/regen_golden.py
+    PYTHONPATH=src python scripts/regen_golden.py            # rewrite
+    PYTHONPATH=src python scripts/regen_golden.py --check    # CI dry run
 
-Run this ONLY when a PR changes control-plane behavior on purpose; the
-diff of the JSON files is part of the review surface.
+Run the rewrite ONLY when a PR changes control-plane behavior on purpose;
+the diff of the JSON files is part of the review surface.  ``--check``
+regenerates in memory and verifies every committed fixture reproduces
+byte-identically without touching the files (exit 1 + a diff summary
+otherwise) — scripts/check.sh runs it so CI catches both accidental
+control-plane drift and stale fixtures.
 """
+import argparse
 import json
+import math
 import os
+import sys
 
-from repro.sim.runner import hetero_demo_spec, run_policy, run_spec
-from repro.sim.traces import DEFAULT_PRIORITY_MIX
+REPO = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, REPO)     # the kvtiers fixture shares benchmarks.run
 
-HERE = os.path.join(os.path.dirname(__file__), "..", "tests", "golden")
+from repro.sim.runner import (hetero_demo_spec, run_policy,  # noqa: E402
+                              run_spec)
+from repro.sim.traces import DEFAULT_PRIORITY_MIX  # noqa: E402
+
+HERE = os.path.join(REPO, "tests", "golden")
 
 
 def regen_tokenscale_azure_conv():
@@ -70,15 +82,75 @@ def regen_hetero_fleet():
     return "hetero_fleet.json", out
 
 
-def main():
+def regen_kvtiers():
+    """Tiered-KV golden on the kvtiers contention fleet (benchmarks.run
+    .run_kvtiers_variant, so the fixture and the bench share one recipe):
+    per-variant kv_summary through both engines, pinning the acceptance
+    gradients — swap strictly beats recompute on preempted p99 TTFT/TPOT,
+    prefix reuse yields a nonzero hit rate and a lower prefill-token
+    load."""
+    from benchmarks.run import (KVTIERS_BLOCK, KVTIERS_CFG, KVTIERS_SESSIONS,
+                                KVTIERS_TRACE, KVTIERS_VARIANTS,
+                                run_kvtiers_variant)
+    out = {"trace": KVTIERS_TRACE, "block_size": KVTIERS_BLOCK,
+           "session_prob": KVTIERS_SESSIONS,
+           "priority_mix": {str(k): v
+                            for k, v in DEFAULT_PRIORITY_MIX.items()},
+           "fleet": dict(KVTIERS_CFG),
+           "variants": {v: list(mv) for v, mv in KVTIERS_VARIANTS.items()},
+           "engines": {}}
+    for eng in ["fluid", "events"]:
+        rows = {}
+        for variant in KVTIERS_VARIANTS:
+            rep = run_kvtiers_variant(variant, engine=eng)
+            # non-finite percentiles (no preempted requests) become null so
+            # the fixture stays strict RFC 8259 JSON
+            kv = {k: (None if isinstance(v, float) and not math.isfinite(v)
+                      else v)
+                  for k, v in rep.kv_summary().items()}
+            rows[variant] = {
+                "n_requests": len(rep.requests),
+                "n_preemptions": len(rep.preemptions),
+                "prefill_tokens": sum(r.src.in_len - r.kv_hit_tokens
+                                      for r in rep.requests),
+                "kv": kv,                 # schema shared with the test
+            }
+        out["engines"][eng] = rows
+    return "kvtiers_session.json", out
+
+
+def render(spec: dict) -> str:
+    return json.dumps(spec, indent=2) + "\n"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--check", action="store_true",
+                    help="dry run: verify the committed fixtures reproduce "
+                         "byte-identically; write nothing")
+    args = ap.parse_args(argv)
+    stale = []
     for name, spec in [regen_tokenscale_azure_conv(),
                        regen_priority_preemption(),
-                       regen_hetero_fleet()]:
+                       regen_hetero_fleet(),
+                       regen_kvtiers()]:
         path = os.path.join(HERE, name)
-        with open(path, "w") as f:
-            json.dump(spec, f, indent=2)
-            f.write("\n")
-        print("wrote", os.path.normpath(path))
+        text = render(spec)
+        if args.check:
+            on_disk = open(path).read() if os.path.exists(path) else ""
+            if on_disk == text:
+                print("ok   ", os.path.normpath(path))
+            else:
+                stale.append(name)
+                print("STALE", os.path.normpath(path))
+        else:
+            with open(path, "w") as f:
+                f.write(text)
+            print("wrote", os.path.normpath(path))
+    if stale:
+        sys.exit(f"golden fixtures do not reproduce byte-identically: "
+                 f"{stale}; regenerate on purpose with "
+                 f"scripts/regen_golden.py and review the diff")
 
 
 if __name__ == "__main__":

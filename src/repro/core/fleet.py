@@ -55,12 +55,33 @@ class PoolSpec:
     tp: int = 1
     init: int = 1                  # initial (convertible: fixed) size
     min: int = 1                   # scale-down floor (non-convertible)
+    # ---- KV-cache tiering (sim.kvcache; decode/convertible roles) ----
+    # block_size > 0 switches the pool's decoders from the legacy flat
+    # byte counter to the paged two-tier allocator (tokens per block);
+    # 0 keeps the pre-KV-subsystem accounting byte-for-byte.
+    block_size: int = 0
+    # usable fraction of HBM after allocator/runtime overheads (the
+    # historical hardcoded 0.9, now a knob)
+    hbm_frac: float = 0.9
+    # host-DRAM offload tier capacity in GB per instance; None = the
+    # chip's own host_dram_cap, 0 = tier disabled (swap falls back to
+    # recompute)
+    offload_gb: Optional[float] = None
+    # retain finished requests' prompt+output blocks in a per-decoder
+    # prefix tree for copy-on-write reuse by same-session follow-ups
+    prefix_cache: bool = False
 
     def __post_init__(self):
         if self.role not in ROLES:
             raise ValueError(
                 f"pool {self.name!r}: unknown role {self.role!r}; "
                 f"expected one of {ROLES}")
+        if self.block_size < 0:
+            raise ValueError(
+                f"pool {self.name!r}: block_size must be >= 0")
+        if not 0.0 < self.hbm_frac <= 1.0:
+            raise ValueError(
+                f"pool {self.name!r}: hbm_frac must be in (0, 1]")
 
     @property
     def key(self) -> tuple[str, str, int]:
@@ -70,11 +91,17 @@ class PoolSpec:
 
 @dataclass(frozen=True)
 class TraceRoute:
-    """Per-model trace routing: which workload a model's pools serve."""
+    """Per-model trace routing: which workload a model's pools serve.
+
+    ``session_prob`` turns the workload conversational: each arrival is a
+    same-session follow-up with this probability, its prompt extending the
+    session's shared prefix (``sim.traces.assign_sessions``; the draw uses
+    an independent RNG stream, so arrivals stay byte-identical)."""
     model: str
     trace: str = "mixed"
     rps: float = 8.0
     priority_mix: Optional[dict[int, float]] = None
+    session_prob: float = 0.0
 
 
 @dataclass(frozen=True)
@@ -126,18 +153,29 @@ def single_pool_fleet(model: str = "llama31_8b", chip: str = "a100",
                       n_convertible: int = 0,
                       priority_mix: Optional[dict[int, float]] = None,
                       init_prefillers: int = 1,
-                      init_decoders: int = 1) -> FleetSpec:
+                      init_decoders: int = 1,
+                      session_prob: float = 0.0,
+                      block_size: int = 0,
+                      hbm_frac: float = 0.9,
+                      offload_gb: Optional[float] = None,
+                      prefix_cache: bool = False) -> FleetSpec:
     """The classic homogeneous PD fleet as a one-model spec — what the
     legacy ``run_policy(policy, trace, model, chip, tp, ...)`` signature
-    desugars to."""
+    desugars to.  The KV-tier knobs apply to the decode-side pools; the
+    defaults keep the legacy flat-byte-counter accounting."""
+    kv = dict(block_size=block_size, hbm_frac=hbm_frac,
+              offload_gb=offload_gb, prefix_cache=prefix_cache)
     pools = [
-        PoolSpec("prefill", "prefill", model, chip, tp, init=init_prefillers),
-        PoolSpec("decode", "decode", model, chip, tp, init=init_decoders),
+        PoolSpec("prefill", "prefill", model, chip, tp, init=init_prefillers,
+                 hbm_frac=hbm_frac),
+        PoolSpec("decode", "decode", model, chip, tp, init=init_decoders,
+                 **kv),
         PoolSpec("convertible", "convertible", model, chip, tp,
-                 init=n_convertible),
+                 init=n_convertible, **kv),
     ]
     return FleetSpec(tuple(pools),
-                     (TraceRoute(model, trace, rps, priority_mix),))
+                     (TraceRoute(model, trace, rps, priority_mix,
+                                 session_prob=session_prob),))
 
 
 @dataclass(frozen=True)

@@ -27,20 +27,30 @@ class ChipSpec:
     mbu: float = 0.70          # achievable fraction of peak HBM bandwidth
     startup_s: float = 5.0     # instance boot (weights load + runtime init)
     cost_per_hour: float = 1.0
+    # host-DRAM KV offload tier (sim.kvcache): bytes of pinned host memory
+    # available per chip, and the effective HBM<->host swap bandwidth
+    # (PCIe/DMA sustained, not the link peak)
+    host_dram_cap: float = 0.0
+    swap_bw: float = 0.0
 
 
 CHIPS: dict[str, ChipSpec] = {
     # 4xA100-40G nodes, NVLink3 600GB/s agg, 2x200Gb IB (paper §V).
     # mfu calibrated so V_P(llama-3.1-8b) ~ Table I's 14K tok/s threshold.
+    # Host tier: PCIe4 x16 (~20 GB/s sustained DMA), 64 GB pinned per chip.
     "a100": ChipSpec("a100", 312e12, 1.555e12, 40e9, 25e9,
-                     mfu=0.72, mbu=0.60, startup_s=5.0, cost_per_hour=4.0),
+                     mfu=0.72, mbu=0.60, startup_s=5.0, cost_per_hour=4.0,
+                     host_dram_cap=64e9, swap_bw=20e9),
     # 8xH100-80G nodes, NVLink 1200GB/s (paper uses "3.0" loosely), 2880Gb
+    # Host tier: PCIe5 x16 (~45 GB/s sustained), 128 GB pinned per chip.
     "h100": ChipSpec("h100", 989e12, 3.35e12, 80e9, 360e9,
-                     mfu=0.50, mbu=0.65, startup_s=5.0, cost_per_hour=8.0),
+                     mfu=0.50, mbu=0.65, startup_s=5.0, cost_per_hour=8.0,
+                     host_dram_cap=128e9, swap_bw=45e9),
     # TPU v5e — the JAX substrate's target (roofline constants used by
-    # launch/roofline.py as well)
+    # launch/roofline.py as well); host tier over PCIe3-class DMA.
     "v5e": ChipSpec("v5e", 197e12, 8.19e11, 16e9, 50e9,
-                    mfu=0.55, mbu=0.70, startup_s=4.0, cost_per_hour=1.2),
+                    mfu=0.55, mbu=0.70, startup_s=4.0, cost_per_hour=1.2,
+                    host_dram_cap=48e9, swap_bw=12e9),
 }
 
 V5E = CHIPS["v5e"]
@@ -67,6 +77,16 @@ class InstanceSpec:
     @property
     def gpus(self) -> int:
         return self.tp
+
+    @property
+    def host_dram_cap(self) -> float:
+        """Host-DRAM offload bytes: each chip brings its own pinned pool."""
+        return self.chip.host_dram_cap * self.tp
+
+    @property
+    def swap_bw(self) -> float:
+        """HBM<->host swap bandwidth: each chip swaps over its own lanes."""
+        return self.chip.swap_bw * self.tp
 
     @property
     def cost_rate(self) -> float:
@@ -173,10 +193,12 @@ def decode_iter_time(cfg: ModelConfig, inst: InstanceSpec, batch: int,
 
 
 def max_batch(cfg: ModelConfig, inst: InstanceSpec, avg_tokens: float,
-              reserve_bytes: float = 0.0) -> int:
-    """Max concurrent decode requests that fit in HBM."""
+              reserve_bytes: float = 0.0, hbm_frac: float = 0.9) -> int:
+    """Max concurrent decode requests that fit in HBM.  ``hbm_frac`` is the
+    usable fraction of HBM after allocator/runtime overheads (the same knob
+    ``PoolSpec.hbm_frac`` threads into the simulated decoders)."""
     per_req = kv_bytes_per_token(cfg) * avg_tokens + state_bytes_fixed(cfg)
-    free = inst.hbm_cap * 0.9 - weight_bytes(cfg) - reserve_bytes
+    free = inst.hbm_cap * hbm_frac - weight_bytes(cfg) - reserve_bytes
     return max(int(free / max(per_req, 1.0)), 0)
 
 

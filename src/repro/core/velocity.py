@@ -94,17 +94,19 @@ def profile_network_velocity(cfg: ModelConfig, inst: InstanceSpec) -> float:
 
 
 def profile_decode_velocity(cfg: ModelConfig, inst: InstanceSpec,
-                            bucket: str,
-                            tpot_slo: float = 0.1) -> tuple[float, int, float]:
+                            bucket: str, tpot_slo: float = 0.1,
+                            hbm_frac: float = 0.9) -> tuple[float, int, float]:
     """Per-bucket V_D (Eq. 1) at the largest SLO-feasible batch.
 
     Sweeps batch (the request-rate sweep's steady-state equivalent) until
     either HBM is exhausted or TPOT crosses the SLO; returns
     (v_decode, batch, tpot).  L_r counts the tokens whose memory a
-    completion releases (input + output)."""
+    completion releases (input + output).  ``hbm_frac`` is the pool's
+    usable-HBM fraction — the profiled capacity bound must match what the
+    pool's decoders actually enforce."""
     in_len, out_len = bucket_lengths(bucket)
     avg_ctx = in_len + out_len / 2.0
-    b_mem = hw.max_batch(cfg, inst, in_len + out_len)
+    b_mem = hw.max_batch(cfg, inst, in_len + out_len, hbm_frac=hbm_frac)
     best = (0.0, 0, 0.0)
     b = 1
     while b <= max(b_mem, 1):
@@ -120,10 +122,11 @@ def profile_decode_velocity(cfg: ModelConfig, inst: InstanceSpec,
 
 
 def profile(cfg: ModelConfig, inst: InstanceSpec,
-            tpot_slo: float = 0.1) -> VelocityProfile:
+            tpot_slo: float = 0.1, hbm_frac: float = 0.9) -> VelocityProfile:
     v_d, mb, tp = {}, {}, {}
     for b in BUCKETS:
-        v, batch, tpot = profile_decode_velocity(cfg, inst, b, tpot_slo)
+        v, batch, tpot = profile_decode_velocity(cfg, inst, b, tpot_slo,
+                                                 hbm_frac)
         v_d[b], mb[b], tp[b] = v, batch, tpot
     return VelocityProfile(
         model=cfg.name, chip=inst.chip.name, tp=inst.tp,
@@ -134,14 +137,17 @@ def profile(cfg: ModelConfig, inst: InstanceSpec,
 
 @lru_cache(maxsize=None)
 def profile_for(model: str, chip: str, tp: int = 1,
-                tpot_slo: float = 0.1) -> VelocityProfile:
+                tpot_slo: float = 0.1,
+                hbm_frac: float = 0.9) -> VelocityProfile:
     """Cached profiler entry by pool key — Token Velocity is defined per
     (model, chip, tp) tuple (§III-B), and a heterogeneous fleet profiles
-    each of its pools once, not once per experiment."""
+    each of its pools once, not once per experiment.  ``hbm_frac`` joins
+    the cache key so a pool with a non-default usable-HBM fraction gets a
+    profile whose Eq. 1/Eq. 3 capacity bounds match its own decoders."""
     from repro.configs import get_config
     from repro.core.hardware import CHIPS
     return profile(get_config(model), InstanceSpec(CHIPS[chip], tp=tp),
-                   tpot_slo)
+                   tpot_slo, hbm_frac)
 
 
 # ---------------------------------------------------------------------------

@@ -4,10 +4,13 @@ from repro.sim.instances import (  # noqa: F401
     ClusterBase, Decoder, Fleet, ModelCost, ModelGroup, Pool, Prefiller,
     PreemptionPolicy,
 )
+from repro.sim.kvcache import (  # noqa: F401
+    KVAllocator, KVError, KVStats, KVTierConfig,
+)
 from repro.sim.traces import (  # noqa: F401
     DEFAULT_PRIORITY_MIX, PRIORITY_CLASSES, TRACES, TraceRequest, TraceSpec,
-    TraceStats, assign_priorities, generate, generate_mixed, get_trace,
-    step_trace, trace_stats,
+    TraceStats, assign_priorities, assign_sessions, generate, generate_mixed,
+    get_trace, step_trace, trace_stats,
 )
 from repro.sim.runner import (  # noqa: F401
     ENGINES, build_fleet, build_traces, compare_engines, compare_policies,

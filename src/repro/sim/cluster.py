@@ -61,7 +61,10 @@ class Cluster(ClusterBase):
             # (priority-ordered; under HBM backpressure this is also where
             # the fluid approximation of preemption fires: victims leave
             # decode between ticks and re-enter pending_decode after their
-            # recompute/swap-in delay)
+            # recompute/swap-in delay.  KV-tier swap completions and
+            # prefix-penalty stalls are likewise approximated here at tick
+            # granularity — the event engine schedules them as exact
+            # swap_done events; DESIGN.md "KV-tier fidelity")
             self._admit_pending(t)
             # ---- retry queued prefills (§IV-E re-evaluation) ----
             self._drain_wait_queue(t)

@@ -130,6 +130,14 @@ class EventCluster(ClusterBase):
     def _ev_kv_ready(self, t: float):
         self._admit_pending(t)
 
+    def _ev_swap_done(self, t: float):
+        """A preempted victim's swap/recompute (or a prefix hit's swap-in /
+        migration) completed *exactly now*; retry admission.  The fluid
+        engine approximates the same completion at tick granularity via
+        its per-tick ``_admit_pending`` ready-time check (DESIGN.md
+        "KV-tier fidelity")."""
+        self._admit_pending(t)
+
     def _ev_iter_done(self, t: float, d: Decoder,
                       batch: list[tuple[SimRequest, int]], it: float):
         d._iter_pending = False
@@ -152,6 +160,7 @@ class EventCluster(ClusterBase):
                 r.t_first_token = t
             if r.generated >= r.src.out_len:
                 r.t_finish = t
+                d._kv_release(r, t)
                 self.finished.append(r)
         d.active = [r for r in d.active if r.t_finish < 0]
         # co-scheduled convertible prefill progress (Eq. 5 restricted rate)
@@ -218,6 +227,7 @@ class EventCluster(ClusterBase):
                                            # iteration boundary
 
     def _on_requeue(self, entry):
-        # a preempted victim re-enters pending_decode; retry admission
-        # exactly when its recompute/swap-in delay elapses
-        self._push(entry[0], "kv_ready")
+        # a preempted victim (or penalized prefix hit) re-enters
+        # pending_decode; retry admission exactly when its recompute /
+        # swap delay elapses — the swap-completion event
+        self._push(entry[0], "swap_done")

@@ -36,6 +36,7 @@ from repro.core.predictor import OutputPredictor
 from repro.core.router import (PRIORITY_STANDARD, BurstDetector, Router,
                                tpot_slo, ttft_slo)
 from repro.core.velocity import BUCKET_OUTPUT, VelocityProfile, bucket_of
+from repro.sim.kvcache import KVAllocator, KVStats, KVTierConfig
 
 
 @dataclass
@@ -51,10 +52,24 @@ class SimRequest:
     generated: float = 0.0
     decode_time: float = 0.0
     n_evictions: int = 0       # times preempted out of a decoder
+    # ---- KV-tier state (sim.kvcache; all None/0 when tiers are off) ----
+    kv_hit_tokens: int = 0     # prompt tokens reused from a cached prefix
+    kv_prefix: Optional[tuple] = None   # (owner decoder, tokens, tier) pin
+    kv_swap: Optional[object] = None    # allocator holding our DRAM ticket
 
     @property
     def priority(self) -> int:
         return getattr(self.src, "priority", PRIORITY_STANDARD)
+
+    @property
+    def session(self) -> int:
+        return getattr(self.src, "session", -1)
+
+    @property
+    def prefill_tokens(self) -> float:
+        """Prompt tokens the prefill stage must actually compute (the
+        cached-prefix hit is served from the KV tier)."""
+        return float(self.src.in_len - self.kv_hit_tokens)
 
     @property
     def model(self) -> str:
@@ -110,9 +125,17 @@ class PreemptionPolicy:
       evict-lowest  — the lowest-priority resident request is evicted, its
                       KV dropped; re-admission pays a full recomputation of
                       the context at prefill velocity;
-      pause-requeue — the victim's KV is swapped out over the interconnect
-                      and restored on re-admission (cheaper than
-                      recomputing, but still a stall).
+      evict-least-slack — SLO-aware victim selection (the ROADMAP's
+                      deadline-based preemption): the victim is the
+                      resident with the lowest deadline slack — arrival +
+                      per-class TTFT/TPOT SLO budget, minus the estimated
+                      remaining decode time — i.e. the request most likely
+                      to miss its SLO anyway; KV dropped like evict-lowest;
+      pause-requeue — the victim's KV is swapped out and restored on
+                      re-admission: to the host-DRAM tier at the chip's
+                      swap bandwidth when the pool runs the paged KV
+                      subsystem (``sim.kvcache``; recompute fallback when
+                      the tier is full), over the interconnect otherwise.
 
     Victims are always *strictly* lower priority than the request being
     admitted, so high-priority work is never displaced by lower classes.
@@ -120,7 +143,7 @@ class PreemptionPolicy:
 
     mode: str = "none"
 
-    MODES = ("none", "evict-lowest", "pause-requeue")
+    MODES = ("none", "evict-lowest", "evict-least-slack", "pause-requeue")
 
     def __post_init__(self):
         if self.mode not in self.MODES:
@@ -177,7 +200,7 @@ class Prefiller(Instance):
     def submit(self, req: SimRequest, t: float):
         if req.t_prefill_start < 0:
             req.t_prefill_start = t
-        _priority_insert(self.queue, (req, float(req.src.in_len)))
+        _priority_insert(self.queue, (req, req.prefill_tokens))
 
     def advance(self, budget: float) -> list[SimRequest]:
         """Serialized head-of-line progress by `budget` tokens; returns
@@ -215,9 +238,19 @@ class Decoder(Instance):
         self.active: list[SimRequest] = []
         self.conv = conv
         self.prefill_q: list[tuple[SimRequest, float]] = []
+        # KV-tier state (sim.kvcache): None keeps the legacy flat byte
+        # counter byte-for-byte; ClusterBase._spawn attaches an allocator
+        # when the pool sets block_size > 0
+        self.kv: Optional[KVAllocator] = None
+        self.hbm_frac = 0.9
+        # on-box convertible completions that found no blocks free wait
+        # here for the shared pending_decode path (kv mode only)
+        self.kv_spill: list[tuple[float, SimRequest]] = []
 
     # ---- memory ----
     def mem_used(self) -> float:
+        if self.kv is not None:
+            return self.kv.used_bytes()
         c = self.cost
         return sum((r.src.in_len + r.generated) * c.kv_tok + c.state_fix
                    for r in self.active)
@@ -225,15 +258,21 @@ class Decoder(Instance):
     def mem_cap(self) -> float:
         reserve = self.conv.mem_reserved if (self.is_convertible
                                              and self.conv) else 0.0
-        return self.spec.hbm_cap * 0.9 - self.cost.w_bytes - reserve
+        return self.spec.hbm_cap * self.hbm_frac - self.cost.w_bytes \
+            - reserve
 
     def mem_util(self) -> float:
         return min(self.mem_used() / max(self.mem_cap(), 1.0), 1.5)
 
-    def can_admit(self, req: SimRequest) -> bool:
+    def _need_bytes(self, req: SimRequest) -> float:
+        """Full-length KV reservation for one request."""
         c = self.cost
-        need = (req.src.in_len + req.src.out_len) * c.kv_tok + c.state_fix
-        return self.mem_used() + need <= self.mem_cap()
+        return (req.src.in_len + req.src.out_len) * c.kv_tok + c.state_fix
+
+    def can_admit(self, req: SimRequest) -> bool:
+        if self.kv is not None:
+            return self.kv.can_admit(req.src.rid, self._need_bytes(req))
+        return self.mem_used() + self._need_bytes(req) <= self.mem_cap()
 
     def inflight_of_bucket(self, bucket: str) -> int:
         return sum(1 for r in self.active if r.bucket_pred == bucket)
@@ -248,12 +287,15 @@ class Decoder(Instance):
     def submit_prefill(self, req: SimRequest, t: float):
         if req.t_prefill_start < 0:
             req.t_prefill_start = t
-        _priority_insert(self.prefill_q, (req, float(req.src.in_len)))
+        _priority_insert(self.prefill_q, (req, req.prefill_tokens))
 
     def advance_prefill(self, budget: float, t: float) -> list[SimRequest]:
         """Restricted-velocity convertible prefill (Eq. 5); completed
         requests transition seamlessly to decode on the same instance.
-        Returns the requests that completed prefill."""
+        Returns the requests that completed prefill.  With the paged KV
+        subsystem the on-box admission is no longer unconditional: when no
+        blocks are free the request spills to ``pending_decode`` (drained
+        by ``ClusterBase._admit_pending``) instead of overcommitting."""
         done = []
         while self.prefill_q and budget > 0:
             req, rem = self.prefill_q[0]
@@ -265,7 +307,10 @@ class Decoder(Instance):
                 req.t_prefill_end = t
                 req.t_kv_ready = t        # on-box: no KVC transfer
                 done.append(req)
-                self.admit(req, t)
+                if self.kv is not None and not self.can_admit(req):
+                    self.kv_spill.append((t, req))
+                else:
+                    self.admit(req, t)
             else:
                 self.prefill_q[0] = (req, rem)
         return done
@@ -278,7 +323,37 @@ class Decoder(Instance):
         # here would make TTFT one full iteration optimistic
         if req.t_decode_start < 0:
             req.t_decode_start = t
+        if req.kv_swap is not None:
+            # the paused victim is back in HBM: release its DRAM ticket on
+            # whichever allocator swapped it out
+            req.kv_swap.swap_in_release(req.src.rid)
+            req.kv_swap = None
+        kp = req.kv_prefix
+        if kp is not None and (kp[0] is not self or self.kv is None
+                               or kp[2] != "hbm"):
+            # admitted away from the prefix owner without passing through
+            # the cluster's penalty path (on-box convertible admission):
+            # migrate the prefix over the owner's interconnect, the stall
+            # charged to decode time (DESIGN.md "KV-tier fidelity")
+            owner, tokens, _tier = kp
+            if owner.kv is not None:
+                owner.kv.unpin(req.src.rid)
+                req.decode_time += owner.kv.migration_stall(
+                    tokens, owner.spec.chip.net_bw)
+            req.kv_prefix = None
+        if self.kv is not None:
+            # consumes this request's pin (CoW-shared prefix blocks), if
+            # the pin lives on this decoder
+            self.kv.admit(req.src.rid, self._need_bytes(req))
+            req.kv_prefix = None
         self.active.append(req)
+
+    def _kv_release(self, req: SimRequest, t: float):
+        """Free the finished request's blocks, leaving its prompt+output
+        prefix cached under its session for follow-up reuse."""
+        if self.kv is not None:
+            self.kv.release(req.src.rid, req.session,
+                            int(req.src.in_len + req.generated), t)
 
     def iter_time(self) -> float:
         b = len(self.active)
@@ -324,12 +399,17 @@ class Decoder(Instance):
                 r.generated = float(r.src.out_len)
                 r.t_finish = t + dt * frac
                 finished.append(r)
+        for r in finished:
+            self._kv_release(r, r.t_finish)
         self.active = [r for r in self.active if r.t_finish < 0]
         return finished
 
     @property
     def idle(self) -> bool:
-        return not self.active and not self.prefill_q
+        # a decoder whose prefix cache is pinned by in-flight arrivals is
+        # not scale-down-safe even with no resident work
+        return not self.active and not self.prefill_q and not self.kv_spill \
+            and not (self.kv is not None and self.kv.busy)
 
 
 # ---------------------------------------------------------------------------
@@ -424,19 +504,24 @@ class SimReport:
     engine: str = "fluid"
     # (t, victim_priority, preemptor_priority, victim_generated) rows
     preemptions: list[tuple] = field(default_factory=list)
+    # KV-tier counters (sim.kvcache.KVStats.summary(); {} when tiers off)
+    kv: dict = field(default_factory=dict)
 
     # ---- SLO metrics (§V) ----
     # Every metric optionally restricts to one priority class and/or one
-    # model (multi-model fleets); SLO targets are per-class
-    # (core.router.ttft_slo / tpot_slo).
+    # model (multi-model fleets) and/or the preempted slice; SLO targets
+    # are per-class (core.router.ttft_slo / tpot_slo).
 
     def _pool(self, priority: Optional[int] = None,
-              model: Optional[str] = None) -> list[SimRequest]:
+              model: Optional[str] = None,
+              preempted: Optional[bool] = None) -> list[SimRequest]:
         reqs = self.requests
         if priority is not None:
             reqs = [r for r in reqs if r.priority == priority]
         if model is not None:
             reqs = [r for r in reqs if r.model == model]
+        if preempted is not None:
+            reqs = [r for r in reqs if (r.n_evictions > 0) == preempted]
         return reqs
 
     def priority_classes(self) -> list[int]:
@@ -480,15 +565,19 @@ class SimReport:
         return done / max(self.duration, 1e-9)
 
     def mean(self, what: str, priority: Optional[int] = None,
-             model: Optional[str] = None) -> float:
-        vals = [getattr(r, what) for r in self._pool(priority, model)
+             model: Optional[str] = None,
+             preempted: Optional[bool] = None) -> float:
+        vals = [getattr(r, what)
+                for r in self._pool(priority, model, preempted)
                 if r.t_finish >= 0 and getattr(r, what) >= 0]
         return float(np.mean(vals)) if vals else float("nan")
 
     def percentile(self, what: str, q: float,
                    priority: Optional[int] = None,
-                   model: Optional[str] = None) -> float:
-        vals = [getattr(r, what) for r in self._pool(priority, model)
+                   model: Optional[str] = None,
+                   preempted: Optional[bool] = None) -> float:
+        vals = [getattr(r, what)
+                for r in self._pool(priority, model, preempted)
                 if r.t_finish >= 0 and getattr(r, what) >= 0]
         return float(np.percentile(vals, q)) if vals else float("nan")
 
@@ -527,6 +616,21 @@ class SimReport:
             "throughput": self.throughput(model=model),
             "ttft_p99": self.percentile("ttft", 99, model=model),
         }
+
+    def kv_summary(self) -> dict:
+        """KV-tier metrics (prefix hit rate, offload bytes, swap stalls,
+        blocks-in-use watermarks) plus the preempted-request tail slice —
+        the schema the ``kvtiers`` golden and its regenerator share.
+        Empty when the fleet runs the legacy flat byte counter."""
+        if not self.kv:
+            return {}
+        out = dict(self.kv)
+        out["n_preempted"] = len(self._pool(preempted=True))
+        out["preempted_ttft_p99"] = self.percentile("ttft", 99,
+                                                    preempted=True)
+        out["preempted_tpot_p99"] = self.percentile("tpot", 99,
+                                                    preempted=True)
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -592,6 +696,12 @@ class ClusterBase:
         self.dt = dt
         self.scale_interval = scale_interval
         self.max_instances = max_instances
+        # KV-tier subsystem (sim.kvcache): one stats sink shared by every
+        # decoder's allocator; enabled per pool via PoolSpec.block_size
+        self.kv_stats = KVStats()
+        self._kv_on = any(
+            p.spec.block_size > 0 and p.spec.role != "prefill"
+            and p.cost.kv_tok > 0 for p in self.pools.values())
         self._iid = 0
         for pool in self.pools.values():     # declaration order = iid order
             for _ in range(pool.spec.init):
@@ -638,8 +748,28 @@ class ClusterBase:
             i = Decoder(self._iid, pool.inst, pool.cost, ready_t,
                         conv=pool.conv_cfg if conv else None)
             i.is_convertible = conv
+            i.hbm_frac = pool.spec.hbm_frac
+            if pool.spec.block_size > 0 and pool.cost.kv_tok > 0:
+                i.kv = self._make_allocator(pool, i)
         i.pool = pool
         return i
+
+    def _make_allocator(self, pool: Pool, d: Decoder) -> KVAllocator:
+        """Resolve the pool's tier knobs against the decoder's usable HBM
+        (after weights and the Eq. 6 convertible reserve) and the chip's
+        host-DRAM constants (``offload_gb=None`` = chip default, 0 = tier
+        off)."""
+        bs = pool.spec.block_size
+        bb = bs * pool.cost.kv_tok
+        n_hbm = max(int(max(d.mem_cap(), 0.0) // bb), 1)
+        off = pool.spec.offload_gb
+        off_bytes = pool.inst.host_dram_cap if off is None else off * 1e9
+        cfg = KVTierConfig(
+            block_size=bs, block_bytes=bb, n_hbm=n_hbm,
+            n_dram=int(max(off_bytes, 0.0) // bb),
+            swap_bw=pool.inst.swap_bw or pool.inst.chip.net_bw,
+            prefix_cache=pool.spec.prefix_cache)
+        return KVAllocator(cfg, self.kv_stats)
 
     # ---- flat views + legacy factories (compat surface) --------------
     def _role_view(self, role: str) -> list:
@@ -696,6 +826,8 @@ class ClusterBase:
         g.router.burst.observe(t, req.src.in_len)
         req.bucket_pred = self.predictor.predict_bucket(
             req.src.in_len, req.src.out_len)
+        if self._kv_on:
+            self._kv_lookup(g, req, t)
         self._arrivals.append((t, req))
         self._arrivals = [(ts, r) for ts, r in self._arrivals if t - ts <= 5.0]
         is_ts = isinstance(self.policy.model_policy(g.model),
@@ -751,11 +883,48 @@ class ClusterBase:
                     still.append(req)
         self.wait_queue = still
 
+    def _kv_lookup(self, g: ModelGroup, req: SimRequest, t: float):
+        """Arrival-time prefix-cache probe: find the decoder holding the
+        longest cached prefix of this request's session and pin it.  A hit
+        shrinks the prefill work and the KVC transfer to the uncached
+        suffix; the pin keeps the blocks resident until admission."""
+        cands = [d for d in g.decode_instances()
+                 if d.kv is not None and d.ready(t) and not d.draining]
+        if not cands:
+            return
+        st = self.kv_stats
+        st.lookups += 1
+        st.prompt_tokens += req.src.in_len
+        sid = req.session
+        if sid < 0 or req.src.prefix_len <= 0:
+            return
+        best, best_tok, best_tier = None, 0, ""
+        for d in cands:
+            tok, tier = d.kv.lookup(sid, req.src.prefix_len)
+            # longest prefix wins; at equal coverage prefer the HBM copy
+            if tok > best_tok or (tok == best_tok and tier == "hbm"
+                                  and best_tier == "dram"):
+                best, best_tok, best_tier = d, tok, tier
+        if best is None or best_tok <= 0:
+            return
+        bs = best.kv.cfg.block_size
+        # keep at least one uncached token so prefill/TTFT stay defined
+        usable = (min(best_tok, req.src.in_len - 1) // bs) * bs
+        if usable <= 0:
+            return
+        best.kv.pin(req.src.rid, sid, usable, t)
+        req.kv_hit_tokens = usable
+        req.kv_prefix = (best, usable, best_tier)
+        st.hits += 1
+        st.hit_tokens += usable
+
     def _to_network(self, req: SimRequest, t: float) -> tuple[float, SimRequest]:
         req.t_prefill_end = t
         g = self._group_of(req)
+        # a prefix-cache hit only ships the uncached suffix (the shared
+        # blocks already live on the decode side)
         delay = hw.kvc_transfer_time(g.prefill.cfg, g.prefill.inst,
-                                     req.src.in_len)
+                                     req.src.in_len - req.kv_hit_tokens)
         entry = (t + delay, req)
         self.pending_decode.append(entry)
         return entry
@@ -769,6 +938,12 @@ class ClusterBase:
         work (the fluid engine reaches this via its per-tick retry; the
         event engine via exact admission events).  Candidates are always
         the request's own model's decode + convertible pools."""
+        if self._kv_on:
+            # on-box convertible completions that found no blocks free
+            for x in self.decoders + self.convertibles:
+                if x.kv_spill:
+                    self.pending_decode.extend(x.kv_spill)
+                    x.kv_spill = []
         rest = []
         queue = sorted(self.pending_decode,
                        key=lambda e: (e[1].priority, e[0], e[1].src.rid))
@@ -778,12 +953,22 @@ class ClusterBase:
                 rest.append((ready_t, req))
                 continue
             g = self._group_of(req)
-            d = g.router.route_decode(
-                req.bucket_pred,
-                [x for x in g.decode_instances()
-                 if x.ready(t) and not x.draining and x.can_admit(req)])
-            if d is None and self.preemption.enabled:
-                d = self._preempt_for(req, t)
+            cands = [x for x in g.decode_instances()
+                     if x.ready(t) and not x.draining and x.can_admit(req)]
+            kp = req.kv_prefix
+            if kp is not None:
+                # prefix affinity: the hit is only free on the owner with
+                # the blocks in HBM; anything else pays a one-time stall
+                # (swap-in / migration / recompute) and retries
+                if kp[2] == "hbm" and kp[0] in cands:
+                    d: Optional[Decoder] = kp[0]
+                else:
+                    self._kv_prefix_penalty(req, t)
+                    continue
+            else:
+                d = g.router.route_decode(req.bucket_pred, cands)
+                if d is None and self.preemption.enabled:
+                    d = self._preempt_for(req, t)
             if d is None:
                 rest.append((ready_t, req))
             else:
@@ -793,20 +978,69 @@ class ClusterBase:
                 self._after_admit(d, t)
         self.pending_decode = rest + self.pending_decode
 
+    def _kv_prefix_penalty(self, req: SimRequest, t: float):
+        """The cached prefix is not immediately usable: its owner can't
+        admit right now, or the copy lives in the host-DRAM tier.  Charge
+        the one-time stall — swap-in at the tier's bandwidth, migration
+        over the owner's interconnect, or a recompute if the copy is gone
+        — then requeue; afterwards the request admits anywhere with a full
+        allocation (the prefill savings already happened)."""
+        owner, tokens, tier = req.kv_prefix
+        st = self.kv_stats
+        kv = owner.kv
+        if tier == "dram":
+            delay = kv.token_bytes(tokens) / max(kv.cfg.swap_bw, 1e-9)
+            st.swap_stall_s += delay
+        elif req.src.rid in kv.pins:
+            delay = kv.migration_stall(tokens, owner.spec.chip.net_bw)
+        else:                           # pin lost (owner torn down)
+            g = self._group_of(req)
+            delay = tokens / max(g.prefill.prof.v_prefill, 1e-9)
+            st.prefix_recomputes += 1
+        kv.unpin(req.src.rid)
+        req.kv_prefix = None
+        entry = (t + delay, req)
+        self.pending_decode.append(entry)
+        self._on_requeue(entry)
+
     def _after_admit(self, d: Decoder, t: float):
         """Engine hook: the event engine wakes the decoder's iteration."""
 
     # ---- preemption (tentpole; DESIGN.md §1) -------------------------
+    def _slack(self, v: SimRequest, d: Decoder, t: float) -> float:
+        """Deadline slack in seconds: time until the victim's end-to-end
+        SLO deadline (arrival + per-class TTFT budget + per-class TPOT
+        budget x output length) minus its estimated remaining decode time
+        at the decoder's current iteration rate.  Negative = already
+        doomed — evicting it forfeits the least attainment."""
+        deadline = v.src.t + ttft_slo(v.src.in_len, v.priority) \
+            + tpot_slo(v.priority) * v.src.out_len
+        remaining = max(v.src.out_len - v.generated, 0.0) * d.iter_time()
+        return deadline - t - remaining
+
+    def _victim_order(self, victims: list, d: Decoder, t: float) -> list:
+        """evict-lowest/pause-requeue: lowest-class-first, least-progress-
+        first (least wasted work).  evict-least-slack: lowest deadline
+        slack first — the request most likely to miss its SLO anyway."""
+        if self.preemption.mode == "evict-least-slack":
+            return sorted(victims,
+                          key=lambda v: (self._slack(v, d, t), v.src.rid))
+        return sorted(victims,
+                      key=lambda v: (-v.priority, v.generated,
+                                     v.t_decode_start))
+
     def _preempt_for(self, req: SimRequest, t: float) -> Optional[Decoder]:
         """HBM backpressure: free memory for ``req`` by preempting
         strictly-lower-priority resident requests.  Returns the decoder
         that can now admit ``req``, or None if no eligible victims exist.
         Host choice: the decoder whose most-expendable victim has the
-        lowest class; victims are evicted lowest-class-first and
-        least-progress-first (least wasted work)."""
+        lowest class (evict-least-slack: the lowest deadline slack);
+        victims are then evicted in ``_victim_order``.  Memory estimates
+        use blocks when the decoder runs the paged KV subsystem, bytes
+        otherwise."""
         g = self._group_of(req)
         c = g.decode.cost
-        need = (req.src.in_len + req.src.out_len) * c.kv_tok + c.state_fix
+        slackful = self.preemption.mode == "evict-least-slack"
         best, best_key = None, None
         for d in g.decode_instances():
             if not d.ready(t) or d.draining:
@@ -815,20 +1049,32 @@ class ClusterBase:
                        if v.t_finish < 0 and v.priority > req.priority]
             if not victims:
                 continue
-            free = d.mem_cap() - d.mem_used()
-            evictable = sum((v.src.in_len + v.generated) * c.kv_tok
-                            + c.state_fix for v in victims)
+            if d.kv is not None:
+                need: float = d.kv.need_blocks(req.src.rid,
+                                               d._need_bytes(req))
+                free: float = d.kv.available()
+                evictable: float = sum(d.kv.owned_blocks(v.src.rid)
+                                       for v in victims)
+            else:
+                need = (req.src.in_len + req.src.out_len) * c.kv_tok \
+                    + c.state_fix
+                free = d.mem_cap() - d.mem_used()
+                evictable = sum((v.src.in_len + v.generated) * c.kv_tok
+                                + c.state_fix for v in victims)
             if free + evictable < need:
                 continue
-            key = (max(v.priority for v in victims), free + evictable)
+            if slackful:
+                key = (-min(self._slack(v, d, t) for v in victims),
+                       free + evictable)
+            else:
+                key = (max(v.priority for v in victims), free + evictable)
             if best_key is None or key > best_key:
                 best, best_key = d, key
         if best is None:
             return None
-        victims = sorted(
-            (v for v in best.active
-             if v.t_finish < 0 and v.priority > req.priority),
-            key=lambda v: (-v.priority, v.generated, v.t_decode_start))
+        victims = self._victim_order(
+            [v for v in best.active
+             if v.t_finish < 0 and v.priority > req.priority], best, t)
         for v in victims:
             if best.can_admit(req):
                 break
@@ -838,17 +1084,45 @@ class ClusterBase:
     def _evict(self, d: Decoder, victim: SimRequest, preemptor: SimRequest,
                t: float):
         """Remove ``victim`` from decode; it re-enters ``pending_decode``
-        after its KV recomputation (evict-lowest) or swap-in
-        (pause-requeue) delay, which is also charged to its decode time."""
+        after its KV recomputation (evict-lowest / evict-least-slack) or
+        swap (pause-requeue) delay, which is also charged to its decode
+        time.  With the paged KV subsystem, pause-requeue is a *real*
+        swap: owned blocks move to the host-DRAM tier (swap-out overlapped
+        with the preemptor; the stall is the swap-in at the tier's
+        bandwidth) and fall back to a recompute only when the tier is
+        full."""
         d.active.remove(victim)
         victim.n_evictions += 1
         ctx = int(victim.src.in_len + victim.generated)
         g = self._group_of(victim)
-        if self.preemption.mode == "pause-requeue":
-            # KV swapped out; restored over the decoder's own interconnect
+        recompute = ctx / max(g.prefill.prof.v_prefill, 1e-9)
+        if d.kv is not None:
+            # KV-subsystem fidelity: a recomputation runs at the prefill
+            # stage, which is exactly what's backlogged during the burst
+            # that caused the backpressure — charge the least-loaded ready
+            # prefiller's backlog on top of the service time.  (The legacy
+            # byte-counter path below keeps the optimistic constant, which
+            # the priority_preemption golden pins.)
+            backlogs = [p.inflight_tokens() / max(p.prefill_velocity(), 1e-9)
+                        for p in self._ready(g.prefill.instances, t)]
+            recompute += min(backlogs) if backlogs else 0.0
+            if self.preemption.mode == "pause-requeue":
+                kind, nbytes = d.kv.swap_out(victim.src.rid)
+                if kind == "swap":
+                    delay = nbytes / max(d.kv.cfg.swap_bw, 1e-9)
+                    self.kv_stats.swap_stall_s += delay
+                    victim.kv_swap = d.kv
+                else:                      # host tier full: KV discarded
+                    self.kv_stats.swap_fallbacks += 1
+                    delay = recompute
+            else:
+                d.kv.drop(victim.src.rid)
+                delay = recompute
+        elif self.preemption.mode == "pause-requeue":
+            # legacy counter: KV swapped over the decoder's interconnect
             delay = hw.kvc_transfer_time(g.decode.cfg, d.pool.inst, ctx)
-        else:                                # evict-lowest: KV dropped, full
-            delay = ctx / max(g.prefill.prof.v_prefill, 1e-9)  # recompute
+        else:                                # KV dropped, full recompute
+            delay = recompute
         victim.decode_time += delay
         self.preemption_log.append(
             (t, victim.priority, preemptor.priority, victim.generated))
@@ -944,6 +1218,7 @@ class ClusterBase:
         for d in self.decoders + self.convertibles:
             out += d.active
             out += [r for r, _ in d.prefill_q]
+            out += [r for _, r in d.kv_spill]
         for p in self.prefillers:
             out += [r for r, _ in p.queue]
         out += [r for _, r in self.pending_decode]
@@ -971,7 +1246,8 @@ class ClusterBase:
                          self.finished + self._unfinished(),
                          self.gpu_seconds, t_end, self.timeline,
                          engine=self.engine,
-                         preemptions=list(self.preemption_log))
+                         preemptions=list(self.preemption_log),
+                         kv=self.kv_stats.summary() if self._kv_on else {})
 
 
 def _pred_out(req: SimRequest) -> int:

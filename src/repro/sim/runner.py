@@ -62,7 +62,8 @@ def build_fleet(fs: FleetSpec,
         cfg = get_config(ps.model)
         inst = InstanceSpec(CHIPS[ps.chip], tp=ps.tp)
         prof = (profiles or {}).get(ps.name) \
-            or profile_for(ps.model, ps.chip, ps.tp)
+            or profile_for(ps.model, ps.chip, ps.tp,
+                           hbm_frac=ps.hbm_frac)
         conv = default_convertible_plan(cfg, inst, prof) \
             if ps.role == "convertible" else None
         pools.append(Pool(ps, cfg, inst, prof, conv_cfg=conv))
@@ -81,7 +82,8 @@ def build_traces(spec: ExperimentSpec) -> list[TraceRequest]:
     for i, route in enumerate(spec.fleet.routes):
         part = get_trace(route.trace, spec.duration, route.rps,
                          spec.seed + _ROUTE_SEED_STRIDE * i,
-                         priority_mix=route.priority_mix)
+                         priority_mix=route.priority_mix,
+                         session_prob=route.session_prob)
         for r in part:
             r.model = route.model
         parts.append(part)
@@ -177,13 +179,26 @@ def run_policy(policy_name: str, trace_name: str = "mixed",
                engine: str = "fluid",
                preemption: str = "none",
                priority_mix: Optional[dict] = None,
-               max_instances: int = 64) -> SimReport:
+               max_instances: int = 64,
+               session_prob: float = 0.0,
+               block_size: int = 0,
+               hbm_frac: float = 0.9,
+               offload_gb: Optional[float] = None,
+               prefix_cache: bool = False) -> SimReport:
     """The classic single-pool experiment, desugared to a one-pool spec.
-    Kept byte-stable with the pre-pool control plane (golden fixtures)."""
+    Kept byte-stable with the pre-pool control plane (golden fixtures).
+    The KV-tier knobs (``block_size``/``hbm_frac``/``offload_gb``/
+    ``prefix_cache``, sim.kvcache) and the multi-turn ``session_prob``
+    default to the legacy flat-byte-counter, single-turn behavior."""
     n_conv = n_convertible if policy_name == "tokenscale" else 0
     fleet_spec = single_pool_fleet(model, chip, tp, trace=trace_name,
                                    rps=rps, n_convertible=n_conv,
-                                   priority_mix=priority_mix)
+                                   priority_mix=priority_mix,
+                                   session_prob=session_prob,
+                                   block_size=block_size,
+                                   hbm_frac=hbm_frac,
+                                   offload_gb=offload_gb,
+                                   prefix_cache=prefix_cache)
     spec = ExperimentSpec(
         fleet=fleet_spec, policy=policy_name, engine=engine,
         preemption=preemption, duration=duration, seed=seed, dt=dt,

@@ -40,6 +40,11 @@ class TraceRequest:
     model: str = ""            # "" = the fleet's default model; multi-model
                                # fleets tag each request with its route's
                                # model (core.fleet.TraceRoute)
+    session: int = -1          # conversation id (-1 = single-turn); set by
+                               # assign_sessions
+    prefix_len: int = 0        # leading prompt tokens shared with the
+                               # session's context (prior prompt + output) —
+                               # what the KV prefix cache can reuse
 
 
 @dataclass(frozen=True)
@@ -115,6 +120,45 @@ def assign_priorities(reqs: list[TraceRequest],
     return reqs
 
 
+def assign_sessions(reqs: list[TraceRequest], session_prob: float,
+                    seed: int = 0, think_s: float = 2.0,
+                    max_open: int = 64) -> list[TraceRequest]:
+    """Group arrivals into multi-turn sessions in place (§V conversational
+    workloads): each request joins an open session with probability
+    ``session_prob`` — its prompt then *extends the shared prefix* (prior
+    prompt + response), recorded as ``prefix_len`` — or opens a new one.
+
+    Only ``session``/``prefix_len`` are written: arrival times and lengths
+    stay byte-identical, and the draw uses an *independent* RNG stream
+    (like ``assign_priorities``), so adding the knob never perturbs an
+    existing seeded trace.  A session is joinable once its previous turn is
+    at least ``think_s`` old (user think time); at most ``max_open``
+    sessions stay joinable (oldest retired first)."""
+    if session_prob <= 0.0:
+        return reqs
+    rng = np.random.RandomState((seed + 15485863) % (2 ** 31))
+    open_sessions: list[list] = []   # [sid, last_t, kv_len]
+    next_sid = 0
+    for r in sorted(reqs, key=lambda r: (r.t, r.rid)):
+        ready = [s for s in open_sessions if r.t - s[1] >= think_s]
+        if ready and rng.uniform() < session_prob:
+            s = ready[rng.randint(len(ready))]
+            r.session = s[0]
+            # the follow-up prompt extends the session context; a shorter
+            # drawn prompt is simply fully covered by it
+            r.prefix_len = min(s[2], r.in_len)
+        else:
+            r.session, r.prefix_len = next_sid, 0
+            next_sid += 1
+            open_sessions.append([r.session, r.t, 0])
+            if len(open_sessions) > max_open:
+                open_sessions.pop(0)
+            s = open_sessions[-1]
+        # next turn's shared context = this prompt + this response
+        s[1], s[2] = r.t, r.in_len + r.out_len
+    return reqs
+
+
 def burst_phases(spec: TraceSpec, duration_s: float,
                  rng) -> list[tuple[float, float, float]]:
     """The ON/OFF burst timeline as (start, end, rate-multiplier) phases.
@@ -133,7 +177,8 @@ def burst_phases(spec: TraceSpec, duration_s: float,
 
 def generate(spec: TraceSpec, duration_s: float, rps: float,
              seed: int = 0,
-             priority_mix: dict[int, float] | None = None
+             priority_mix: dict[int, float] | None = None,
+             session_prob: float = 0.0
              ) -> list[TraceRequest]:
     """ON/OFF modulated Poisson arrivals with lognormal lengths."""
     rng = np.random.RandomState(seed)
@@ -156,11 +201,13 @@ def generate(spec: TraceSpec, duration_s: float, rps: float,
     outs = _lognormal(rng, spec.out_mean, spec.out_sigma, 16, 640, n)
     reqs = [TraceRequest(i, float(times[i]), int(ins[i]), int(outs[i]))
             for i in range(n)]
-    return assign_priorities(reqs, priority_mix, seed)
+    assign_priorities(reqs, priority_mix, seed)
+    return assign_sessions(reqs, session_prob, seed)
 
 
 def generate_mixed(duration_s: float, rps: float, seed: int = 0,
-                   priority_mix: dict[int, float] | None = None
+                   priority_mix: dict[int, float] | None = None,
+                   session_prob: float = 0.0
                    ) -> list[TraceRequest]:
     """The paper's Mixed trace: conv + code + BurstGPT 1/2 at equal rates."""
     parts = []
@@ -171,22 +218,28 @@ def generate_mixed(duration_s: float, rps: float, seed: int = 0,
     parts.sort(key=lambda r: r.t)
     for i, r in enumerate(parts):
         r.rid = i
-    return parts
+    # sessions are drawn over the merged arrival order (conversations are a
+    # property of the workload, not of one component trace)
+    return assign_sessions(parts, session_prob, seed)
 
 
 def get_trace(name: str, duration_s: float = 120.0, rps: float = 8.0,
               seed: int = 0,
-              priority_mix: dict[int, float] | None = None
+              priority_mix: dict[int, float] | None = None,
+              session_prob: float = 0.0
               ) -> list[TraceRequest]:
     if name == "mixed":
-        return generate_mixed(duration_s, rps, seed, priority_mix)
-    return generate(TRACES[name], duration_s, rps, seed, priority_mix)
+        return generate_mixed(duration_s, rps, seed, priority_mix,
+                              session_prob)
+    return generate(TRACES[name], duration_s, rps, seed, priority_mix,
+                    session_prob)
 
 
 def varying_rate_trace(segments: list[tuple[float, float]],
                        spec: TraceSpec = TRACES["azure_conv"],
                        seed: int = 0,
-                       priority_mix: dict[int, float] | None = None
+                       priority_mix: dict[int, float] | None = None,
+                       session_prob: float = 0.0
                        ) -> list[TraceRequest]:
     """Piecewise-rate workload (large-scale load swings; used by the
     provisioned-vs-required correlation study, Fig. 11)."""
@@ -201,14 +254,16 @@ def varying_rate_trace(segments: list[tuple[float, float]],
     out.sort(key=lambda r: r.t)
     for i, r in enumerate(out):
         r.rid = i
-    return assign_priorities(out, priority_mix, seed)
+    assign_priorities(out, priority_mix, seed)
+    return assign_sessions(out, session_prob, seed)
 
 
 def step_trace(duration_s: float, base_rps: float, burst_rps: float,
                burst_start: float, burst_len: float,
                spec: TraceSpec = TRACES["azure_conv"],
                seed: int = 0,
-               priority_mix: dict[int, float] | None = None
+               priority_mix: dict[int, float] | None = None,
+               session_prob: float = 0.0
                ) -> list[TraceRequest]:
     """Deterministic-rate step trace (Fig. 10: 1 -> 10 RPS at t=10 s)."""
     rng = np.random.RandomState(seed)
@@ -225,4 +280,5 @@ def step_trace(duration_s: float, base_rps: float, burst_rps: float,
                                  16, 640, 1)[0])
         reqs.append(TraceRequest(rid, t, in_len, out_len))
         rid += 1
-    return assign_priorities(reqs, priority_mix, seed)
+    assign_priorities(reqs, priority_mix, seed)
+    return assign_sessions(reqs, session_prob, seed)

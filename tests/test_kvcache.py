@@ -1,0 +1,464 @@
+"""Tiered KV-cache subsystem (PR 4 tentpole; sim/kvcache.py).
+
+Covers, in order:
+
+  * allocator unit semantics — admit/release/drop/swap round trips,
+    double-free and over-allocation raising, CoW prefix sharing, LRU
+    reclaim with DRAM demotion;
+  * the block-conservation property the ISSUE names: a seeded random-ops
+    fuzz over the allocator with the double-entry ``check()`` audit after
+    every operation (blocks never leak or double-free across
+    admit/evict/swap/complete), then the same audit at the end of
+    end-to-end runs on BOTH engines x every preemption mode;
+  * the multi-turn session trace knob (arrivals stay byte-identical,
+    independent RNG stream, prefix semantics);
+  * engine integration — fluid-vs-events differential band with the KV
+    subsystem enabled, the ``hbm_frac`` knob, spec JSON round-trip of the
+    tier knobs, and the ``evict-least-slack`` SLO-aware victim selector.
+
+The headline gradients (swap strictly beating recompute on preempted p99
+TTFT/TPOT, prefix reuse cutting prefill-token load) are pinned by the
+``kvtiers_session`` golden in tests/test_golden_policy.py.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ExperimentSpec, OutputPredictor, PerModelFleetPolicy
+from repro.core.autoscaler import build_policy
+from repro.core.fleet import PoolSpec, single_pool_fleet
+from repro.sim.kvcache import KVAllocator, KVError, KVStats, KVTierConfig
+from repro.sim.runner import (build_fleet, build_traces, compare_engines,
+                              get_engine, run_policy)
+from repro.sim.traces import (DEFAULT_PRIORITY_MIX, TRACES, assign_sessions,
+                              generate, get_trace, trace_stats)
+
+
+def make_alloc(n_hbm=32, n_dram=16, bs=4, prefix=True, stats=None):
+    cfg = KVTierConfig(block_size=bs, block_bytes=float(bs), n_hbm=n_hbm,
+                       n_dram=n_dram, swap_bw=1e9, prefix_cache=prefix)
+    return KVAllocator(cfg, stats)
+
+
+# ---------------------------------------------------------------------------
+# allocator unit semantics
+# ---------------------------------------------------------------------------
+
+def test_admit_release_roundtrip():
+    kv = make_alloc()
+    assert kv.can_admit(1, 10.0)
+    kv.admit(1, 10.0)              # 10 bytes / 4-byte blocks -> 3 blocks
+    kv.check()
+    assert kv.hard_used == 3
+    assert kv.used_bytes() == 3 * 4.0
+    kv.release(1, sid=-1, ctx_tokens=12, t=0.0)
+    kv.check()
+    assert kv.hard_used == 0
+    assert len(kv.free) == kv.cfg.n_hbm
+
+
+def test_double_admit_and_unknown_release_raise():
+    kv = make_alloc()
+    kv.admit(1, 4.0)
+    with pytest.raises(KVError):
+        kv.admit(1, 4.0)
+    with pytest.raises(KVError):
+        kv.release(2, -1, 4, 0.0)
+    with pytest.raises(KVError):
+        kv.drop(3)
+    kv.check()
+
+
+def test_over_allocation_raises():
+    kv = make_alloc(n_hbm=4, n_dram=0)
+    assert not kv.can_admit(1, 100.0)     # 25 blocks > 4
+    with pytest.raises(KVError):
+        kv.admit(1, 100.0)
+
+
+def test_prefix_cache_copy_on_write_share():
+    kv = make_alloc(n_hbm=32)
+    kv.admit(1, 40.0)                     # 10 blocks
+    kv.release(1, sid=7, ctx_tokens=38, t=1.0)   # cache 9 full blocks
+    kv.check()
+    tok, tier = kv.lookup(7, prefix_len=38)
+    assert (tok, tier) == (36, "hbm")     # 9 blocks x 4 tokens
+    kv.pin(2, 7, tok, t=2.0)
+    kv.check()
+    # the follow-up only allocates beyond the 9 shared blocks
+    assert kv.need_blocks(2, 48.0) == 12 - 9
+    kv.admit(2, 48.0)
+    kv.check()
+    a = kv.allocs[2]
+    assert len(a.shared) == 9 and len(a.owned) == 3
+    # shared blocks are referenced, not copied: 9 + 3 hard-used in total
+    assert kv.hard_used == 12
+    kv.release(2, sid=7, ctx_tokens=48, t=3.0)
+    kv.check()
+    # the session entry now covers the longer prefix
+    assert kv.lookup(7, prefix_len=100)[0] == 48
+
+
+def test_lru_reclaim_demotes_to_dram_then_drops():
+    stats = KVStats()
+    kv = make_alloc(n_hbm=8, n_dram=4, stats=stats)
+    kv.admit(1, 16.0)                     # 4 blocks
+    kv.release(1, sid=0, ctx_tokens=16, t=1.0)
+    kv.admit(2, 16.0)
+    kv.release(2, sid=1, ctx_tokens=16, t=2.0)
+    kv.check()
+    # 8 blocks cached across two sessions; a 6-block admission must
+    # reclaim: session 0 (LRU) demotes into the 4-block DRAM tier,
+    # session 1 is dropped (tier full)
+    kv.admit(3, 24.0)
+    kv.check()
+    assert stats.demotions == 1
+    assert kv.lookup(0, 16) == (16, "dram")
+    assert kv.lookup(1, 16) == (0, "")
+    kv.release(3, -1, 24, t=3.0)
+    kv.check()
+
+
+def test_pinned_entries_survive_pressure():
+    kv = make_alloc(n_hbm=8, n_dram=0)
+    kv.admit(1, 16.0)
+    kv.release(1, sid=0, ctx_tokens=16, t=1.0)
+    kv.pin(2, 0, 16, t=2.0)
+    # all 8 blocks: 4 pinned + 4 free; a 6-block admission cannot reclaim
+    # the pinned entry
+    assert kv.available() == 4
+    assert not kv.can_admit(3, 24.0)
+    kv.unpin(2)
+    assert kv.available() == 8
+    kv.check()
+
+
+def test_swap_out_roundtrip_and_tier_full_fallback():
+    stats = KVStats()
+    kv = make_alloc(n_hbm=16, n_dram=4, stats=stats)
+    kv.admit(1, 16.0)                     # 4 owned blocks
+    kind, nbytes = kv.swap_out(1)
+    assert kind == "swap" and nbytes == 16.0
+    assert kv.dram_free == 0 and kv.hard_used == 0
+    kv.check()
+    assert kv.swap_in_release(1) == 4
+    assert kv.dram_free == 4
+    kv.check()
+    # tier already holds nothing now; fill it, then overflow falls back
+    kv.admit(2, 16.0)
+    kv.admit(3, 4.0)
+    assert kv.swap_out(2)[0] == "swap"
+    assert kv.swap_out(3)[0] == "drop"    # DRAM full: recompute fallback
+    kv.check()
+    assert stats.swap_outs == 2
+
+
+# ---------------------------------------------------------------------------
+# block conservation: seeded random-ops fuzz with the double-entry audit
+# ---------------------------------------------------------------------------
+
+def test_allocator_fuzz_conserves_blocks():
+    rng = np.random.RandomState(0)
+    kv = make_alloc(n_hbm=24, n_dram=8, bs=4)
+    live: dict[int, int] = {}     # rid -> sid
+    swapped: list[int] = []
+    sessions: list[int] = []
+    rid = 0
+    for step in range(2000):
+        op = rng.randint(6)
+        if op <= 1:                                   # admit (maybe pinned)
+            rid += 1
+            nbytes = float(rng.randint(1, 40))
+            sid = int(rng.randint(4))
+            if sessions and rng.rand() < 0.5:
+                psid = sessions[rng.randint(len(sessions))]
+                tok, tier = kv.lookup(psid, prefix_len=rng.randint(1, 64))
+                if tok > 0 and tier == "hbm":
+                    kv.pin(rid, psid, tok, t=float(step))
+            if kv.can_admit(rid, nbytes):
+                kv.admit(rid, nbytes)
+                live[rid] = sid
+            else:
+                kv.unpin(rid)
+        elif op == 2 and live:                        # finish -> cache
+            r = list(live)[rng.randint(len(live))]
+            sid = live.pop(r)
+            kv.release(r, sid, ctx_tokens=int(rng.randint(1, 64)),
+                       t=float(step))
+            if sid not in sessions:
+                sessions.append(sid)
+        elif op == 3 and live:                        # evict (recompute)
+            r = list(live)[rng.randint(len(live))]
+            live.pop(r)
+            kv.drop(r)
+        elif op == 4 and live:                        # pause (swap tier)
+            r = list(live)[rng.randint(len(live))]
+            live.pop(r)
+            if kv.swap_out(r)[0] == "swap":
+                swapped.append(r)
+        elif op == 5 and swapped:                     # swap-in completes
+            kv.swap_in_release(swapped.pop(rng.randint(len(swapped))))
+        kv.check()                                    # audit EVERY step
+    for r in list(live):
+        kv.release(r, live.pop(r), 16, t=9999.0)
+    for r in swapped:
+        kv.swap_in_release(r)
+    kv.check()
+    assert kv.hard_used == 0
+    # drain the prefix cache: once every entry is reclaimed, every HBM
+    # block must be back on the free list — nothing leaked
+    while kv._reclaim_one():
+        kv.check()
+    assert len(kv.free) == kv.cfg.n_hbm
+    assert not kv.ref and not kv.hard
+
+
+# ---------------------------------------------------------------------------
+# multi-turn session traces
+# ---------------------------------------------------------------------------
+
+def test_sessions_do_not_perturb_arrivals():
+    plain = generate(TRACES["azure_conv"], 60.0, 8.0, seed=5)
+    sess = generate(TRACES["azure_conv"], 60.0, 8.0, seed=5,
+                    session_prob=0.7)
+    assert [(r.t, r.in_len, r.out_len, r.priority) for r in plain] \
+        == [(r.t, r.in_len, r.out_len, r.priority) for r in sess]
+    assert all(r.session == -1 and r.prefix_len == 0 for r in plain)
+
+
+def test_sessions_deterministic_and_well_formed():
+    a = get_trace("azure_code", 120.0, 8.0, seed=3, session_prob=0.6)
+    b = get_trace("azure_code", 120.0, 8.0, seed=3, session_prob=0.6)
+    assert [(r.session, r.prefix_len) for r in a] \
+        == [(r.session, r.prefix_len) for r in b]
+    follow = [r for r in a if r.prefix_len > 0]
+    assert follow, "no follow-up turns drawn"
+    for r in a:
+        assert r.session >= 0
+        assert 0 <= r.prefix_len <= r.in_len
+    # sessions are chains: a follow-up shares its session with an earlier
+    # arrival, and the shared prefix equals the prior turn's context
+    by_t = sorted(a, key=lambda r: (r.t, r.rid))
+    last_ctx: dict[int, int] = {}
+    for r in by_t:
+        if r.prefix_len > 0:
+            assert r.session in last_ctx
+            assert r.prefix_len == min(last_ctx[r.session], r.in_len)
+        last_ctx[r.session] = r.in_len + r.out_len
+    # roughly session_prob of eligible arrivals join an open session
+    frac = len(follow) / max(len(a), 1)
+    assert 0.2 < frac < 0.85
+
+
+def test_mixed_trace_sessions_span_components():
+    trace = get_trace("mixed", 60.0, 8.0, seed=0, session_prob=0.5)
+    assert any(r.prefix_len > 0 for r in trace)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: both engines, every mode, allocators audited afterwards
+# ---------------------------------------------------------------------------
+
+def run_contended(engine, mode, duration=22.0, prefix=True):
+    """The kvtiers contention scenario with the cluster object exposed, so
+    tests can audit every decoder's allocator after the run."""
+    fleet_spec = single_pool_fleet(
+        "qwen25_32b", "a100", 2, trace="azure_code", rps=7.0,
+        n_convertible=1, priority_mix=DEFAULT_PRIORITY_MIX,
+        session_prob=0.5, block_size=16, prefix_cache=prefix)
+    spec = ExperimentSpec(fleet=fleet_spec, policy="tokenscale",
+                          engine=engine, preemption=mode, duration=duration,
+                          seed=0, max_instances=2)
+    fleet = build_fleet(spec.fleet)
+    trace = build_traces(spec)
+    g = fleet.groups[fleet.default_model]
+    stats = trace_stats(trace)
+    pol = build_policy("tokenscale", g.prefill.prof,
+                       decode_prof=g.decode.prof, mean_in=stats.mean_in,
+                       mean_out=stats.mean_out, n_convertible=1)
+    cl = get_engine(engine)(
+        fleet, policy=PerModelFleetPolicy({fleet.default_model: pol}),
+        predictor=OutputPredictor(0.85, 0), preemption=mode,
+        max_instances=2)
+    rep = cl.run(trace, spec.duration + spec.extra_horizon)
+    return cl, rep, trace
+
+
+@pytest.fixture(scope="module", params=["fluid", "events"])
+def engine(request):
+    return request.param
+
+
+@pytest.fixture(scope="module",
+                params=["evict-lowest", "evict-least-slack",
+                        "pause-requeue"])
+def contended_kv(request, engine):
+    return run_contended(engine, request.param)
+
+
+def test_blocks_conserved_end_to_end(contended_kv):
+    """The ISSUE's conservation property at system level: after a full
+    contended run (admissions, evictions, swaps, completions, prefix
+    reuse) every allocator passes the double-entry audit and its live
+    allocations are exactly the decoder's resident requests."""
+    cl, rep, trace = contended_kv
+    audited = 0
+    for d in cl.decoders + cl.convertibles:
+        if d.kv is None:
+            continue
+        d.kv.check()
+        assert set(d.kv.allocs) == {r.src.rid for r in d.active}
+        audited += 1
+    assert audited > 0
+    assert len(rep.requests) == len(trace)          # nothing lost
+    assert len(rep.requests) == len({id(r) for r in rep.requests})
+
+
+def test_preemption_fires_and_victims_strictly_lower(contended_kv):
+    cl, rep, _ = contended_kv
+    assert len(rep.preemptions) > 0
+    for _, victim_pri, preemptor_pri, _ in rep.preemptions:
+        assert victim_pri > preemptor_pri
+
+
+def test_swap_accounting_consistent(contended_kv):
+    cl, rep, _ = contended_kv
+    ks = rep.kv_summary()
+    if cl.preemption.mode == "pause-requeue":
+        assert ks["swap_outs"] > 0
+        assert ks["offload_bytes"] > 0
+        assert ks["swap_stall_s"] > 0
+        assert ks["swap_ins"] <= ks["swap_outs"]
+    else:
+        assert ks["swap_outs"] == 0
+    assert 0 < ks["peak_blocks_frac"] <= 1.0
+    assert 0.0 <= ks["prefix_hit_rate"] < 1.0
+
+
+def test_prefix_reuse_hits_on_session_trace(contended_kv):
+    cl, rep, _ = contended_kv
+    ks = rep.kv_summary()
+    assert ks["prefix_hit_rate"] > 0
+    assert ks["hit_tokens"] > 0
+    saved = sum(r.kv_hit_tokens for r in rep.requests)
+    assert saved == ks["hit_tokens"]
+    total_in = sum(r.src.in_len for r in rep.requests)
+    assert sum(r.src.in_len - r.kv_hit_tokens
+               for r in rep.requests) < total_in
+
+
+# ---------------------------------------------------------------------------
+# differential band with the KV subsystem enabled (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_kv_differential_band_holds():
+    """Fluid vs events must stay inside the historical 15% band with
+    paging + prefix reuse + sessions enabled (same tolerance and dt as
+    tests/test_sim_differential.py)."""
+    reps = compare_engines("tokenscale", "azure_conv", duration=40.0,
+                           rps=6.0, seed=0, dt=0.0125, block_size=16,
+                           prefix_cache=True, session_prob=0.6)
+    fl, ev = reps["fluid"], reps["events"]
+    assert len(fl.requests) == len(ev.requests)
+
+    def close(a, b, abs_tol):
+        return abs(a - b) <= max(0.15 * max(abs(a), abs(b)), abs_tol)
+
+    assert close(fl.throughput(), ev.throughput(), 0.1)
+    assert close(fl.mean("ttft"), ev.mean("ttft"), 0.020)
+    assert close(fl.mean("tpot"), ev.mean("tpot"), 0.005)
+    # both engines agree the cache is working
+    assert fl.kv["prefix_hit_rate"] > 0
+    assert ev.kv["prefix_hit_rate"] > 0
+
+
+# ---------------------------------------------------------------------------
+# knobs: hbm_frac, spec round trip, legacy default
+# ---------------------------------------------------------------------------
+
+def test_hbm_frac_knob_threads_to_decoders():
+    caps = {}
+    for frac in (0.5, 0.9):
+        fs = single_pool_fleet("llama31_8b", "a100", 1, hbm_frac=frac)
+        spec = ExperimentSpec(fleet=fs, duration=1.0)
+        fleet = build_fleet(spec.fleet)
+        g = fleet.groups[fleet.default_model]
+        stats = trace_stats([])
+        pol = build_policy("tokenscale", g.prefill.prof,
+                           decode_prof=g.decode.prof, mean_in=stats.mean_in,
+                           mean_out=stats.mean_out, n_convertible=0)
+        cl = get_engine("fluid")(
+            fleet, policy=PerModelFleetPolicy({fleet.default_model: pol}))
+        d = cl.decoders[0]
+        caps[frac] = d.mem_cap()
+        assert d.hbm_frac == frac
+    spec_cap = 40e9           # a100 hbm_cap
+    assert caps[0.9] - caps[0.5] == pytest.approx(0.4 * spec_cap, rel=1e-6)
+
+
+def test_hbm_frac_threads_into_velocity_profile():
+    """The autoscaler's Eq. 1/Eq. 3 capacity bounds must match what the
+    pool's decoders enforce: a lower usable-HBM fraction shrinks the
+    profiled max batch (and never inflates decode velocity)."""
+    from repro.core.velocity import profile_for
+    full = profile_for("llama31_8b", "a100", 1)
+    tight = profile_for("llama31_8b", "a100", 1, hbm_frac=0.5)
+    assert any(tight.max_batch[b] < full.max_batch[b]
+               for b in full.max_batch)
+    assert all(tight.max_batch[b] <= full.max_batch[b]
+               for b in full.max_batch)
+    assert all(tight.v_decode[b] <= full.v_decode[b] + 1e-9
+               for b in full.v_decode)
+
+
+def test_pool_spec_validates_kv_knobs():
+    with pytest.raises(ValueError):
+        PoolSpec("d", "decode", block_size=-1)
+    with pytest.raises(ValueError):
+        PoolSpec("d", "decode", hbm_frac=0.0)
+    with pytest.raises(ValueError):
+        PoolSpec("d", "decode", hbm_frac=1.5)
+
+
+def test_experiment_spec_roundtrips_kv_knobs():
+    fs = single_pool_fleet("llama31_8b", "a100", 1, block_size=32,
+                           hbm_frac=0.8, offload_gb=12.0, prefix_cache=True,
+                           session_prob=0.4)
+    spec = ExperimentSpec(fleet=fs, policy="tokenscale", duration=5.0)
+    back = ExperimentSpec.from_json(spec.to_json())
+    assert back == spec
+    dec = [p for p in back.fleet.pools if p.role == "decode"][0]
+    assert (dec.block_size, dec.hbm_frac, dec.offload_gb,
+            dec.prefix_cache) == (32, 0.8, 12.0, True)
+    assert back.fleet.routes[0].session_prob == 0.4
+
+
+def test_kv_disabled_by_default():
+    rep = run_policy("tokenscale", "azure_conv", duration=10.0, rps=4.0,
+                     seed=0)
+    assert rep.kv == {} and rep.kv_summary() == {}
+
+
+# ---------------------------------------------------------------------------
+# evict-least-slack (SLO-aware victim selection; ROADMAP satellite)
+# ---------------------------------------------------------------------------
+
+CONTENTION = dict(model="qwen25_32b", tp=2, duration=22.0, rps=8.0, seed=0,
+                  max_instances=2, priority_mix=DEFAULT_PRIORITY_MIX)
+
+
+def test_evict_least_slack_fires_and_respects_priority():
+    rep = run_policy("tokenscale", "burstgpt2", engine="events",
+                     preemption="evict-least-slack", **CONTENTION)
+    assert len(rep.preemptions) > 0
+    for _, victim_pri, preemptor_pri, _ in rep.preemptions:
+        assert victim_pri > preemptor_pri     # never same-or-higher class
+
+
+def test_evict_least_slack_protects_high_priority_tail():
+    none = run_policy("tokenscale", "burstgpt2", engine="events",
+                      preemption="none", **CONTENTION)
+    slack = run_policy("tokenscale", "burstgpt2", engine="events",
+                       preemption="evict-least-slack", **CONTENTION)
+    assert slack.percentile("ttft", 99, priority=0) \
+        < none.percentile("ttft", 99, priority=0)
+    assert slack.slo_attainment(0) >= none.slo_attainment(0)
