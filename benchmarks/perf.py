@@ -1,0 +1,265 @@
+"""Simulator performance benchmarks — the tracked perf trajectory.
+
+    PYTHONPATH=src python -m benchmarks.perf                 # run + compare
+    PYTHONPATH=src python -m benchmarks.perf --update        # refresh BENCH_sim.json
+    PYTHONPATH=src python -m benchmarks.perf --scenario million
+    PYTHONPATH=src python -m benchmarks.perf --smoke --budget 6.0   # CI row
+
+Three scenarios, each emitting {wall-clock seconds, events/sec, peak RSS}:
+
+  * ``tails_replay`` — 12 cells of the tails bench (2 contended traces x
+    2 policies x 3 preemption modes on the memory-tight qwen25-32B TP2 /
+    2-instance fleet): the preemption/backpressure hot path;
+  * ``million``      — a ~1M-request, 2.5-hour azure_code burst trace
+    streamed through the event engine (``sim.traces.stream_trace``; the
+    heap holds only live events): the long-trace scale path;
+  * ``hetero64``     — a 64-instance two-model mixed-chip fleet (a100 +
+    h100 pools) for 60 s at event fidelity: the wide-fleet path.
+
+``BENCH_sim.json`` at the repo root records the trajectory:
+
+  * ``baseline_pre_pr`` — the seed code's numbers for the same scenarios,
+    measured once before the O(1)-hot-path rework and kept for reference
+    (the tails replay must stay >= 5x faster than it);
+  * ``current``         — refreshed with ``--update`` whenever a PR
+    changes simulator performance on purpose (the JSON diff is part of
+    the review surface, like the golden fixtures).
+
+The default (no ``--update``) run compares fresh numbers against the
+committed ``current`` entry and the pre-PR baseline, flagging regressions
+>25% without failing (wall clock is machine-dependent; the hard gate is
+the --smoke budget row in scripts/check.sh).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import sys
+import time
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+BENCH_PATH = os.path.join(REPO, "BENCH_sim.json")
+
+from repro.core import OutputPredictor, single_pool_fleet  # noqa: E402
+from repro.core.autoscaler import build_policy  # noqa: E402
+from repro.core.fleet import (ExperimentSpec, FleetSpec,  # noqa: E402
+                              PerModelFleetPolicy, PoolSpec, TraceRoute)
+from repro.sim.events import EventCluster  # noqa: E402
+from repro.sim.runner import build_fleet, run_policy, run_spec  # noqa: E402
+from repro.sim.traces import DEFAULT_PRIORITY_MIX, stream_trace  # noqa: E402
+
+
+def _peak_rss_gb() -> float:
+    """Process RSS watermark.  ru_maxrss is KiB on Linux but bytes on
+    macOS.  Cumulative across the process, so in an all-scenario run it
+    reflects the heaviest scenario executed so far."""
+    rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return rss / (1e9 if sys.platform == "darwin" else 1e6)
+
+
+# ---------------------------------------------------------------------------
+# Scenarios
+# ---------------------------------------------------------------------------
+
+#: the tails-bench contention fleet (benchmarks.run.TAILS_CFG)
+TAILS_CFG = dict(model="qwen25_32b", tp=2, duration=30.0, rps=8.0, seed=0,
+                 max_instances=2)
+TAILS_GRID = [(trace, pol, mode)
+              for trace in ("burstgpt2", "azure_code")
+              for pol in ("tokenscale", "distserve")
+              for mode in ("none", "evict-lowest", "pause-requeue")]
+
+
+def run_tails_replay(duration: float = None) -> dict:
+    """Replay 12 tails-bench cells through the event engine (the
+    preemption/backpressure hot path; ``duration`` shortens the cells for
+    the CI smoke row)."""
+    cfg = dict(TAILS_CFG)
+    if duration is not None:
+        cfg["duration"] = duration
+    t0 = time.perf_counter()
+    n_req = n_ev = 0
+    for trace, pol, mode in TAILS_GRID:
+        rep = run_policy(pol, trace, engine="events", preemption=mode,
+                         priority_mix=DEFAULT_PRIORITY_MIX, **cfg)
+        n_req += len(rep.requests)
+        n_ev += rep.n_events
+    wall = time.perf_counter() - t0
+    return {"wall_s": round(wall, 2), "requests": n_req, "events": n_ev,
+            "events_per_s": round(n_ev / wall), "peak_rss_gb":
+            round(_peak_rss_gb(), 3)}
+
+
+#: the million-request scenario: >1M azure_code requests over 2.5 h,
+#: streamed (never fully materialized) through the event engine on an
+#: autoscaled qwen2-0.5B fleet
+MILLION = dict(model="qwen2_0_5b", trace="azure_code", rps=115.0,
+               duration=9000.0, seed=0, max_instances=256)
+
+
+def run_million(duration: float = None, rps: float = None) -> dict:
+    m = dict(MILLION)
+    if duration is not None:
+        m["duration"] = duration
+    if rps is not None:
+        m["rps"] = rps
+    fs = single_pool_fleet(m["model"], "a100", 1, trace=m["trace"],
+                           rps=m["rps"], n_convertible=1)
+    fleet = build_fleet(fs)
+    g = fleet.groups[m["model"]]
+    pol = build_policy("tokenscale", g.prefill.prof,
+                       decode_prof=g.decode.prof,
+                       mean_in=2048.0, mean_out=80.0, n_convertible=1)
+    cl = EventCluster(fleet, policy=PerModelFleetPolicy({m["model"]: pol}),
+                      predictor=OutputPredictor(0.85, m["seed"]),
+                      max_instances=m["max_instances"])
+    t0 = time.perf_counter()
+    rep = cl.run(stream_trace(m["trace"], m["duration"], m["rps"],
+                              seed=m["seed"]),
+                 duration=m["duration"] + 30.0)
+    wall = time.perf_counter() - t0
+    return {"wall_s": round(wall, 2), "requests": len(rep.requests),
+            "events": cl.n_events, "events_per_s": round(cl.n_events / wall),
+            "peak_rss_gb": round(_peak_rss_gb(), 3),
+            "slo_attainment": round(rep.slo_attainment(), 4)}
+
+
+def hetero64_spec(duration: float = 60.0) -> ExperimentSpec:
+    """A 64-instance two-model mixed-chip fleet (8+20+4 instances per
+    model, a100 + h100 pools)."""
+    return ExperimentSpec(
+        fleet=FleetSpec(
+            pools=(
+                PoolSpec("llama-pre", "prefill", "llama31_8b", "a100",
+                         init=8),
+                PoolSpec("llama-dec", "decode", "llama31_8b", "a100",
+                         init=20),
+                PoolSpec("llama-conv", "convertible", "llama31_8b", "a100",
+                         init=4),
+                PoolSpec("qwen-pre", "prefill", "qwen25_32b", "a100", tp=2,
+                         init=8),
+                PoolSpec("qwen-dec", "decode", "qwen25_32b", "h100", tp=1,
+                         init=20),
+                PoolSpec("qwen-conv", "convertible", "qwen25_32b", "h100",
+                         tp=1, init=4),
+            ),
+            routes=(TraceRoute("llama31_8b", "azure_conv", rps=30.0),
+                    TraceRoute("qwen25_32b", "azure_code", rps=10.0))),
+        policy="tokenscale", engine="events", duration=duration, seed=0,
+        max_instances=96)
+
+
+def run_hetero64(duration: float = 60.0) -> dict:
+    t0 = time.perf_counter()
+    rep = run_spec(hetero64_spec(duration))
+    wall = time.perf_counter() - t0
+    return {"wall_s": round(wall, 2), "requests": len(rep.requests),
+            "peak_rss_gb": round(_peak_rss_gb(), 3)}
+
+
+SCENARIOS = {
+    "tails_replay": run_tails_replay,
+    "million": run_million,
+    "hetero64": run_hetero64,
+}
+
+
+# ---------------------------------------------------------------------------
+# Trajectory file
+# ---------------------------------------------------------------------------
+
+def load_bench() -> dict:
+    if os.path.exists(BENCH_PATH):
+        with open(BENCH_PATH) as f:
+            return json.load(f)
+    return {}
+
+
+def save_bench(data: dict):
+    with open(BENCH_PATH, "w") as f:
+        json.dump(data, f, indent=2)
+        f.write("\n")
+    print(f"wrote {os.path.normpath(BENCH_PATH)}")
+
+
+def compare(fresh: dict, recorded: dict, label: str):
+    for name, row in fresh.items():
+        old = (recorded or {}).get(name)
+        if not old or not isinstance(old.get("wall_s"), (int, float)):
+            continue
+        ratio = row["wall_s"] / max(old["wall_s"], 1e-9)
+        flag = "  <-- >25% slower than " + label if ratio > 1.25 else ""
+        print(f"  vs {label} {name}: {old['wall_s']}s -> "
+              f"{row['wall_s']}s ({ratio:.2f}x){flag}")
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def smoke(budget: float) -> int:
+    """CI row (scripts/check.sh): one contended tails cell + a scaled-down
+    streaming slice must finish inside ``budget`` wall-clock seconds —
+    the hard regression gate for the O(1) hot-path rework (the reworked
+    engines run this in ~2.5-4 s depending on machine load; the seed
+    code's O(batch) hot paths took minutes on the streaming slice, so
+    the default 12 s budget has wide machine-noise headroom while still
+    catching any real complexity regression)."""
+    t0 = time.perf_counter()
+    rep = run_policy("tokenscale", "burstgpt2", engine="events",
+                     preemption="evict-lowest",
+                     priority_mix=DEFAULT_PRIORITY_MIX,
+                     **{**TAILS_CFG, "duration": 22.0})
+    row = run_million(duration=120.0)
+    wall = time.perf_counter() - t0
+    print(f"perfscale-smoke,wall_s,{wall:.2f}")
+    print(f"perfscale-smoke,tails_requests,{len(rep.requests)}")
+    print(f"perfscale-smoke,stream_requests,{row['requests']}")
+    print(f"perfscale-smoke,budget_s,{budget}")
+    if wall > budget:
+        print(f"perfscale-smoke,FAIL,wall {wall:.2f}s exceeds the "
+              f"{budget}s budget", file=sys.stderr)
+        return 1
+    print("perfscale-smoke,ok,within budget")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="benchmarks.perf", description=__doc__,
+                                 formatter_class=argparse
+                                 .RawDescriptionHelpFormatter)
+    ap.add_argument("--update", action="store_true",
+                    help="write the fresh numbers to BENCH_sim.json's "
+                         "'current' entry (review the diff like a golden)")
+    ap.add_argument("--scenario", action="append", default=[],
+                    choices=sorted(SCENARIOS),
+                    help="scenario subset (may repeat; default: all)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI budget row: a quick cell with a wall-clock "
+                         "assertion; exits nonzero over budget")
+    ap.add_argument("--budget", type=float, default=12.0,
+                    help="--smoke wall-clock budget in seconds")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return smoke(args.budget)
+    names = args.scenario or sorted(SCENARIOS)
+    fresh = {}
+    for name in names:
+        print(f"== {name} ==", flush=True)
+        row = fresh[name] = SCENARIOS[name]()
+        for k, v in row.items():
+            print(f"{name},{k},{v}")
+    data = load_bench()
+    compare(fresh, data.get("baseline_pre_pr"), "pre-PR baseline")
+    compare(fresh, data.get("current"), "recorded current")
+    if args.update:
+        cur = data.setdefault("current", {})
+        cur.update(fresh)
+        save_bench(data)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

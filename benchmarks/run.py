@@ -634,6 +634,20 @@ def smoke():
     emit("smoke", "kvtiers,peak_blocks_frac", ks["peak_blocks_frac"])
 
 
+def perfscale():
+    """Simulator wall-clock trajectory rows (benchmarks/perf.py): the
+    tails replay + a scaled-down slice of the million-request streaming
+    scenario.  The full suite (1M requests, 64-instance fleet) and the
+    BENCH_sim.json trajectory live in ``python -m benchmarks.perf``."""
+    from benchmarks.perf import run_million, run_tails_replay
+    row = run_tails_replay(duration=22.0)
+    for k, v in row.items():
+        emit("perfscale", f"tails_replay_smoke,{k}", v)
+    row = run_million(duration=300.0)
+    for k, v in row.items():
+        emit("perfscale", f"stream_smoke,{k}", v)
+
+
 def run_spec_files(paths: list[str]):
     """Run declarative ExperimentSpec JSON files (--spec=...) and emit
     their summary + per-model rows."""
@@ -671,6 +685,7 @@ BENCHES = {
     "tails": tails,
     "kvtiers": kvtiers,
     "hetero": hetero,
+    "perfscale": perfscale,
     "smoke": smoke,
 }
 

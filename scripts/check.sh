@@ -22,4 +22,10 @@ python -m benchmarks.run --bench=smoke
 echo "== golden fixtures reproduce byte-identically (regen dry run) =="
 python scripts/regen_golden.py --check
 
+# budget sized at ~3-4x the measured wall on a loaded dev box (~2.5-4 s):
+# loose enough for slow CI runners, still far below what any O(batch)
+# hot-path regression produces (the seed code took minutes on this row)
+echo "== perfscale smoke (wall-clock budget gate; see benchmarks/perf.py) =="
+python -m benchmarks.perf --smoke --budget 12.0
+
 echo "OK: all checks passed"

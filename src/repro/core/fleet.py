@@ -193,11 +193,21 @@ class ExperimentSpec:
     predictor_accuracy: float = 0.85
     max_instances: int = 64
     extra_horizon: float = 30.0    # drain time past the last arrival
+    # timeline snapshot cadence in seconds; None = adaptive (the engines'
+    # historical 0.2 s, stretched on multi-hour horizons so the timeline
+    # length stays bounded — see ClusterBase._snapshot_every)
+    snapshot_interval: Optional[float] = None
     policy_options: dict = field(default_factory=dict)
 
     # ---- JSON round trip -------------------------------------------------
     def to_dict(self) -> dict:
-        return asdict(self)
+        d = asdict(self)
+        if d.get("snapshot_interval") is None:
+            # keep the serialized form of specs that don't set the knob
+            # identical to the pre-knob schema (the hetero golden records
+            # a spec dict and must reproduce byte-for-byte)
+            d.pop("snapshot_interval")
+        return d
 
     def to_json(self, **kw) -> str:
         kw.setdefault("indent", 2)

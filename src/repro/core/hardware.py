@@ -202,8 +202,19 @@ def max_batch(cfg: ModelConfig, inst: InstanceSpec, avg_tokens: float,
     return max(int(free / max(per_req, 1.0)), 0)
 
 
+#: id(cfg) -> (cfg, kv_bytes_per_token, state_bytes_fixed); the strong cfg
+#: reference both guards against id reuse and keeps the entry valid.  The
+#: constants are pure functions of the config, but the layer-spec walk
+#: behind them is ~30 us — too hot for the simulators' per-transfer path.
+_KVC_CONSTS: dict[int, tuple] = {}
+
+
 def kvc_transfer_time(cfg: ModelConfig, inst: InstanceSpec,
                       n_tokens: int) -> float:
     """Prefiller -> decoder KVC (or SSM state) transfer seconds."""
-    payload = kv_bytes_per_token(cfg) * n_tokens + state_bytes_fixed(cfg)
+    ent = _KVC_CONSTS.get(id(cfg))
+    if ent is None or ent[0] is not cfg:
+        ent = _KVC_CONSTS[id(cfg)] = (
+            cfg, kv_bytes_per_token(cfg), state_bytes_fixed(cfg))
+    payload = ent[1] * n_tokens + ent[2]
     return payload / inst.chip.net_bw

@@ -11,6 +11,7 @@ prefill on-box.
 """
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional, Protocol
 
@@ -54,16 +55,35 @@ class PrefillTarget(Protocol):
 @dataclass
 class BurstDetector:
     """Short-window rate vs long-window running average (§II-C methodology:
-    spikes above the running average are bursts)."""
+    spikes above the running average are bursts).
+
+    Both windows are maintained *incrementally* over deques: ``observe``
+    and ``rates`` are O(1) amortized instead of rebuilding/re-summing the
+    long window per arrival (which made the gateway O(window) per request
+    — the first quadratic wall on million-request traces).  The running
+    sums stay bit-for-bit equal to the historical from-scratch reductions
+    because observed token counts are integers (prompt lengths): every
+    partial sum is an exactly-representable integer, so float addition
+    and subtraction are exact and order-independent here."""
     short_s: float = 1.0
     long_s: float = 60.0
     factor: float = 1.5
     min_events: int = 3        # no "burst" before any baseline exists
-    _events: list[tuple[float, float]] = field(default_factory=list)
+    _events: deque = field(default_factory=deque)
+    _short: deque = field(default_factory=deque)
+    _long_sum: float = 0.0
+    _short_sum: float = 0.0
 
     def observe(self, t: float, tokens: float):
-        self._events.append((t, tokens))
-        self._events = [e for e in self._events if t - e[0] <= self.long_s]
+        e = (t, tokens)
+        self._events.append(e)
+        self._long_sum += tokens
+        self._short.append(e)
+        self._short_sum += tokens
+        events = self._events
+        while events and t - events[0][0] > self.long_s:
+            self._long_sum -= events.popleft()[1]
+        self._trim_short(t)
 
     def _short_h(self, t: float) -> float:
         # the short window never covers more than half the observed
@@ -73,16 +93,23 @@ class BurstDetector:
         # the fix's symmetric-elapsed variant, never-burst before PR 2)
         return min(self.short_s, max(t / 2.0, 1e-3))
 
+    def _trim_short(self, t: float):
+        # t - _short_h(t) is non-decreasing in t, so the short window's
+        # left edge only ever moves right — expiry is monotone
+        h = self._short_h(t)
+        short = self._short
+        while short and t - short[0][0] > h:
+            self._short_sum -= short.popleft()[1]
+
     def rates(self, t: float) -> tuple[float, float]:
         """Both windows are normalized over their *observed* horizon, so an
         opening spike (t < short_s) is detectable against the brief
         baseline that preceded it; past 2x short_s this reduces to the
         nominal short_s/elapsed normalization."""
-        short_h = self._short_h(t)
-        short = sum(v for ts, v in self._events if t - ts <= short_h) \
-            / short_h
+        self._trim_short(t)
+        short = self._short_sum / self._short_h(t)
         long_h = min(self.long_s, max(t, 1e-3))
-        long = sum(v for ts, v in self._events) / long_h
+        long = self._long_sum / long_h
         return short, long
 
     def is_burst(self, t: float) -> bool:
@@ -100,7 +127,14 @@ class BurstDetector:
 def _by_velocity(targets: list) -> list:
     """Candidates in descending prefill-velocity order.  ``sorted`` is
     stable, so a homogeneous pool (all velocities equal) keeps its
-    original order — single-pool routing is unchanged."""
+    original order — single-pool routing is unchanged.  That common case
+    is detected up front and skips the sort (and its key tuples)
+    entirely: a stable sort on all-equal keys is the identity."""
+    if len(targets) < 2:
+        return targets
+    v0 = targets[0].prefill_velocity()
+    if all(x.prefill_velocity() == v0 for x in targets[1:]):
+        return targets
     return sorted(targets, key=lambda x: -x.prefill_velocity())
 
 

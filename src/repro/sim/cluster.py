@@ -46,17 +46,26 @@ class Cluster(ClusterBase):
         ti = 0
         t = 0.0
         next_scale = 0.0
+        # snapshot cadence (0.2 s historically; adaptive past ~13 min so
+        # multi-hour traces cap the timeline length — DESIGN.md §Perf)
+        snap_mod = max(int(self._snapshot_every(t_end) / self.dt), 1)
+        # the fleet only changes inside _scale, so the per-tick GPU count
+        # is a cached constant between scale executions
+        gpus = self._gpu_count(t)
         while t < t_end:
             # ---- arrivals ----
             while ti < len(trace) and trace[ti].t <= t:
                 self._on_arrival(SimRequest(trace[ti]), t)
                 ti += 1
             # ---- stage ticks ----
-            for p in self.prefillers:
-                for req in p.tick(t, self.dt):
-                    self._to_network(req, t)
-            for d in self.decoders + self.convertibles:
-                self.finished += d.tick(t, self.dt)
+            for pool in self.fleet.role_pools("prefill"):
+                for p in pool.instances:
+                    for req in p.tick(t, self.dt):
+                        self._to_network(req, t)
+            for role in ("decode", "convertible"):
+                for pool in self.fleet.role_pools(role):
+                    for d in pool.instances:
+                        self.finished += d.tick(t, self.dt)
             # ---- network -> decoder admission ----
             # (priority-ordered; under HBM backpressure this is also where
             # the fluid approximation of preemption fires: victims leave
@@ -72,9 +81,10 @@ class Cluster(ClusterBase):
             if t >= next_scale:
                 self._scale(t)
                 next_scale = t + self.scale_interval
+                gpus = self._gpu_count(t)
             # ---- accounting ----
-            self.gpu_seconds += self._gpu_count(t) * self.dt
-            if int(t / self.dt) % max(int(0.2 / self.dt), 1) == 0:
+            self.gpu_seconds += gpus * self.dt
+            if int(t / self.dt) % snap_mod == 0:
                 self.timeline.append(self._snapshot(t))
             t += self.dt
         return self._report(t_end)

@@ -28,6 +28,28 @@ instance, so mixed fleets (different chips/TP per pool, several models)
 need no event-engine-specific handling — pool membership and per-model
 routing live in the shared ``ClusterBase``.
 
+Performance (DESIGN.md "Performance"): the hot loop is O(1) amortized per
+event —
+
+  * arrivals feed lazily from the sorted trace (which may be a streaming
+    iterator, ``sim.traces.stream_trace``): the heap holds only *live*
+    events, never the whole trace, and ties resolve arrivals-first in
+    trace order exactly as the historical eager pre-push did (arrivals
+    were pushed before every other event, so their sequence numbers were
+    strictly smaller);
+  * iteration membership uses admission-generation stamps
+    (``SimRequest._res_gen`` vs the ``_iter_gen`` recorded when the
+    iteration was scheduled) instead of snapshotting the batch into the
+    event and rebuilding an ``id()`` set on completion — a request gets
+    this iteration's token iff it was admitted before the iteration
+    started and hasn't been evicted (or evicted + re-admitted) since,
+    which is the same predicate the (resident, n_evictions) snapshot
+    encoded;
+  * instance liveness is the O(1) ``Instance.live`` flag, not an
+    ``inst in self.decoders + self.convertibles`` list-concat probe;
+  * the piecewise-constant GPU integral caches the fleet size between
+    scale events (the only place the fleet changes).
+
 Fidelity choices and the fluid-vs-event comparison are documented in
 DESIGN.md.
 """
@@ -35,7 +57,7 @@ from __future__ import annotations
 
 import heapq
 import itertools
-from typing import Optional
+from typing import Iterable, Optional
 
 from repro.sim.instances import ClusterBase, Decoder, Prefiller, SimReport, \
     SimRequest
@@ -56,31 +78,75 @@ class EventCluster(ClusterBase):
         super().__init__(*args, **kwargs)
         self._heap: list[tuple[float, int, str, tuple]] = []
         self._seq = itertools.count()
+        self._snap_every = 0.2
+        self.n_events = 0        # processed events (benchmarks/perf.py)
 
     # ------------------------------------------------------------------
     def _push(self, t: float, kind: str, *data):
         heapq.heappush(self._heap, (t, next(self._seq), kind, data))
 
     # ------------------------------------------------------------------
-    def run(self, trace: list[TraceRequest],
+    def run(self, trace: "list[TraceRequest] | Iterable[TraceRequest]",
             duration: Optional[float] = None) -> SimReport:
-        trace = sorted(trace, key=lambda r: r.t)
-        t_end = duration or (trace[-1].t + 60.0 if trace else 60.0)
-        for tr in trace:
-            if tr.t < t_end:
-                self._push(tr.t, "arrival", SimRequest(tr))
+        """Drive the cluster over ``trace``.  A list is sorted here (the
+        historical contract); any other iterable is consumed lazily and
+        must already be in arrival-time order (streaming traces), in which
+        case ``duration`` is required."""
+        if isinstance(trace, (list, tuple)):
+            trace = sorted(trace, key=lambda r: r.t)
+            t_end = duration or (trace[-1].t + 60.0 if trace else 60.0)
+        else:
+            if duration is None:
+                raise ValueError(
+                    "streaming traces need an explicit duration")
+            t_end = duration
+        arrivals = iter(trace)
+        nxt = next(arrivals, None)
+        self._snap_every = self._snapshot_every(t_end)
         self._push(0.0, "scale")
         self._push(0.0, "snapshot")
         t_cur = 0.0
-        while self._heap:
-            te, _, kind, data = heapq.heappop(self._heap)
+        heap = self._heap
+        # the fleet only changes inside scale events: cache the GPU count
+        # for the piecewise-constant integral instead of recounting pools
+        # on every event
+        gpus = self._gpu_count(t_cur)
+        while heap or nxt is not None:
+            # lazy arrival feed: an arrival fires when it is no later than
+            # the earliest heap event (ties arrival-first, in trace order —
+            # byte-identical to the historical eager pre-push, whose
+            # arrival sequence numbers were strictly smaller than every
+            # other event's)
+            if nxt is not None and (not heap or nxt.t <= heap[0][0]):
+                if nxt.t >= t_end:
+                    nxt = None
+                    continue
+                te = nxt.t
+                if te < t_cur:
+                    # unreachable for a sorted trace (arrivals fire before
+                    # any later heap event); an unsorted streaming
+                    # iterator must fail loudly, not corrupt the
+                    # piecewise-constant GPU integral
+                    raise ValueError(
+                        f"trace not sorted by arrival time: request "
+                        f"{nxt.rid} at t={te} after t={t_cur}")
+                self.gpu_seconds += gpus * (te - t_cur)
+                t_cur = te
+                self.n_events += 1
+                self._ev_arrival(te, SimRequest(nxt))
+                nxt = next(arrivals, None)
+                continue
+            te, _, kind, data = heapq.heappop(heap)
             if te >= t_end:
                 break
             # integrate GPU-seconds over the piecewise-constant fleet
-            self.gpu_seconds += self._gpu_count(t_cur) * (te - t_cur)
+            self.gpu_seconds += gpus * (te - t_cur)
             t_cur = te
+            self.n_events += 1
             getattr(self, "_ev_" + kind)(te, *data)
-        self.gpu_seconds += self._gpu_count(t_cur) * (t_end - t_cur)
+            if kind == "scale":
+                gpus = self._gpu_count(te)
+        self.gpu_seconds += gpus * (t_end - t_cur)
         return self._report(t_end)
 
     # ------------------------------------------------------------------
@@ -97,31 +163,32 @@ class EventCluster(ClusterBase):
 
     def _ev_snapshot(self, t: float):
         self.timeline.append(self._snapshot(t))
-        self._push(t + 0.2, "snapshot")
+        self._push(t + self._snap_every, "snapshot")
 
     def _ev_wake(self, t: float, inst):
         """A provisioned instance finished booting."""
         inst._wake_scheduled = False
+        if not inst.live:
+            return
         if isinstance(inst, Prefiller):
-            if inst in self.prefillers:
-                self._drain_wait_queue(t)
-                self._kick_prefiller(inst, t)
+            self._drain_wait_queue(t)
+            self._kick_prefiller(inst, t)
         else:
-            if inst in self.decoders + self.convertibles:
-                self._drain_wait_queue(t)
-                self._admit_pending(t)
-                self._kick_decoder(inst, t)
+            self._drain_wait_queue(t)
+            self._admit_pending(t)
+            self._kick_decoder(inst, t)
 
     def _ev_prefill_done(self, t: float, p: Prefiller, req: SimRequest):
         p._busy = False
-        if p not in self.prefillers:
+        if not p.live:
             # instance was scaled down mid-flight: requeue its head on the
             # central queue (should not happen — only idle instances are
             # removed — but stay safe)
-            self.wait_queue.append(req)
+            self._wait_add(req)
             return
         if p.queue and p.queue[0][0] is req:
             p.queue.pop(0)
+            p._inflight_cache = None
         kv_ready_t, _ = self._to_network(req, t)   # sets t_prefill_end
         self._push(kv_ready_t, "kv_ready")
         self._drain_wait_queue(t)          # prefill capacity freed (§IV-E)
@@ -138,31 +205,45 @@ class EventCluster(ClusterBase):
         "KV-tier fidelity")."""
         self._admit_pending(t)
 
-    def _ev_iter_done(self, t: float, d: Decoder,
-                      batch: list[tuple[SimRequest, int]], it: float):
+    def _ev_iter_done(self, t: float, d: Decoder, it: float):
         d._iter_pending = False
-        if d not in self.decoders + self.convertibles:
+        if not d.live:
             return
-        # one token per resident request for this iteration; requests
-        # preempted out of the decoder mid-iteration get no token — the
-        # eviction-count stamp catches even a victim that was evicted and
-        # re-admitted to this same decoder before the iteration completed
-        resident = {id(r) for r in d.active}
-        for r, n_ev in batch:
-            if r.t_finish >= 0 or id(r) not in resident \
-                    or r.n_evictions != n_ev:
-                continue
-            r.generated += 1.0
-            r.decode_time += it
-            if r.t_first_token < 0:
-                # TTFT is exact: the first token exists when the first
-                # decode iteration containing the request *completes*
-                r.t_first_token = t
-            if r.generated >= r.src.out_len:
-                r.t_finish = t
-                d._kv_release(r, t)
-                self.finished.append(r)
-        d.active = [r for r in d.active if r.t_finish < 0]
+        # one token per request resident *since the iteration started*:
+        # the admission-generation stamp (set by Decoder.admit, monotonic
+        # per decoder) filters both mid-iteration admissions and victims
+        # evicted-and-re-admitted before the iteration completed — the
+        # predicate the historical (batch snapshot, n_evictions) pair
+        # encoded, without materializing a list per iteration
+        gen = d._iter_gen
+        finished = []
+        if d.active:
+            d._invalidate()                # resident lengths advance
+            fin_append = self.finished.append
+            granted = 0
+            for r in d.active:
+                if r.t_finish >= 0 or r._res_gen > gen:
+                    continue
+                g_new = r.generated + 1.0
+                r.generated = g_new
+                r.decode_time += it
+                granted += 1
+                if r.t_first_token < 0:
+                    # TTFT is exact: the first token exists when the first
+                    # decode iteration containing the request *completes*
+                    r.t_first_token = t
+                if g_new >= r.src.out_len:
+                    r.t_finish = t
+                    d._kv_release(r, t)
+                    fin_append(r)
+                    finished.append(r)
+            # one whole token per granted request: keeps the decoder's
+            # exact-integer context sum in step with the batch
+            d._ctx_sum += granted
+        if finished:
+            d.active = [r for r in d.active if r.t_finish < 0]
+            for r in finished:
+                d._count_remove(r)
         # co-scheduled convertible prefill progress (Eq. 5 restricted rate)
         if d.is_convertible and d.prefill_q and d.conv:
             d.advance_prefill(d.conv.v_prefill * it, t)
@@ -191,8 +272,8 @@ class EventCluster(ClusterBase):
         if d.active:
             it = d.iter_time()
             d._iter_pending = True
-            self._push(t + it, "iter_done", d,
-                       [(r, r.n_evictions) for r in d.active], it)
+            d._iter_gen = d._admit_seq     # membership cutoff stamp
+            self._push(t + it, "iter_done", d, it)
         elif d.is_convertible and d.prefill_q and d.conv:
             # prefill-only "iteration": no decode batch to pace it, so
             # checkpoint progress at the chunk cadence
@@ -200,7 +281,8 @@ class EventCluster(ClusterBase):
             v = max(d.conv.v_prefill, 1e-9)
             it = min(head_rem / v, _CONV_PREFILL_QUANTUM)
             d._iter_pending = True
-            self._push(t + it, "iter_done", d, [], it)
+            d._iter_gen = d._admit_seq
+            self._push(t + it, "iter_done", d, it)
 
     def _schedule_wake(self, inst):
         if not getattr(inst, "_wake_scheduled", False):
@@ -208,9 +290,10 @@ class EventCluster(ClusterBase):
             self._push(inst.ready_t, "wake", inst)
 
     def _after_scale(self, t: float):
-        for inst in self.prefillers + self.decoders + self.convertibles:
-            if not inst.ready(t):
-                self._schedule_wake(inst)
+        for pool in self.pools.values():
+            for inst in pool.instances:
+                if not inst.ready(t):
+                    self._schedule_wake(inst)
 
     # ------------------------------------------------------------------
     # control-plane hooks

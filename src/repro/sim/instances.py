@@ -16,9 +16,24 @@ module.  Everything here is engine-agnostic:
     re-evaluation (§IV-E), Observation construction, and scaling.
 
 Engines differ only in how they advance time (see DESIGN.md).
+
+Performance (DESIGN.md "Performance"): the hot-path aggregates on
+``Decoder``/``Prefiller`` (``mem_used``, ``iter_time``, inflight-token
+totals, per-bucket/per-class resident counts) are *cached with dirty-flag
+invalidation*, never incrementally-drifted floats: a cache is dropped on
+any membership/length change and the next read re-runs the identical
+from-scratch reduction, so every value is bit-for-bit what the seed code
+computed (the golden fixtures pin this).  Integer counters (bucket/class
+residency) are maintained incrementally because integer arithmetic is
+exact.  ``check_aggregates`` re-derives everything from first principles
+— the perf-invariant fuzz (tests/test_perf_invariants.py) calls it after
+every operation, mirroring ``KVAllocator.check``.
 """
 from __future__ import annotations
 
+import heapq
+from bisect import bisect_right, insort
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -39,7 +54,7 @@ from repro.core.velocity import BUCKET_OUTPUT, VelocityProfile, bucket_of
 from repro.sim.kvcache import KVAllocator, KVStats, KVTierConfig
 
 
-@dataclass
+@dataclass(slots=True)
 class SimRequest:
     src: "TraceRequest"  # noqa: F821  (sim.traces.TraceRequest)
     bucket_pred: str = ""
@@ -56,25 +71,28 @@ class SimRequest:
     kv_hit_tokens: int = 0     # prompt tokens reused from a cached prefix
     kv_prefix: Optional[tuple] = None   # (owner decoder, tokens, tier) pin
     kv_swap: Optional[object] = None    # allocator holding our DRAM ticket
+    # ---- hot-path caches (immutable trace facts, resolved once: the
+    # preemption scans touch .priority millions of times per run) ----
+    priority: int = field(init=False, repr=False, compare=False, default=1)
+    session: int = field(init=False, repr=False, compare=False, default=-1)
+    model: str = field(init=False, repr=False, compare=False, default="")
+    # admission-generation stamp issued by Decoder.admit: the event engine
+    # grants an iteration's token only to requests admitted before the
+    # iteration started (and not evicted/re-admitted since)
+    _res_gen: int = field(init=False, repr=False, compare=False, default=0)
 
-    @property
-    def priority(self) -> int:
-        return getattr(self.src, "priority", PRIORITY_STANDARD)
-
-    @property
-    def session(self) -> int:
-        return getattr(self.src, "session", -1)
+    def __post_init__(self):
+        src = self.src
+        self.priority = getattr(src, "priority", PRIORITY_STANDARD)
+        self.session = getattr(src, "session", -1)
+        # "" = the fleet's default model
+        self.model = getattr(src, "model", "")
 
     @property
     def prefill_tokens(self) -> float:
         """Prompt tokens the prefill stage must actually compute (the
         cached-prefix hit is served from the KV tier)."""
         return float(self.src.in_len - self.kv_hit_tokens)
-
-    @property
-    def model(self) -> str:
-        """The model this request targets ("" = the fleet's default)."""
-        return getattr(self.src, "model", "")
 
     @property
     def ttft(self) -> float:
@@ -160,16 +178,22 @@ class PreemptionPolicy:
         return x if isinstance(x, cls) else cls(x or "none")
 
 
+def _entry_priority(entry: tuple) -> int:
+    return entry[0].priority
+
+
 def _priority_insert(queue: list, entry: tuple):
     """Insert a (request, remaining) entry behind the (possibly
     in-progress) head, ahead of queued work of strictly lower priority.
-    Within a class the order stays FIFO."""
-    req = entry[0]
-    for j in range(1 if queue else 0, len(queue)):
-        if queue[j][0].priority > req.priority:
-            queue.insert(j, entry)
-            return
-    queue.append(entry)
+    Within a class the order stays FIFO.
+
+    The tail ``queue[1:]`` is always sorted by priority (head-protected
+    inserts keep it that way, and only heads are ever popped), so the
+    historical linear scan is a bisect: the insertion point it finds is
+    identical, at O(log n) comparisons instead of O(n)."""
+    j = bisect_right(queue, entry[0].priority, lo=1 if queue else 0,
+                     key=_entry_priority)
+    queue.insert(j, entry)
 
 
 class Instance:
@@ -180,6 +204,11 @@ class Instance:
         self.cost = cost
         self.ready_t = ready_t
         self.draining = False
+        # True while the instance belongs to a pool; cleared on scale-down
+        # removal.  Replaces the historical ``inst in self.decoders +
+        # self.convertibles`` list-concat membership probes on the event
+        # hot path (O(pools + instances) per event) with an O(1) flag.
+        self.live = True
 
     def ready(self, t: float) -> bool:
         return t >= self.ready_t
@@ -190,9 +219,15 @@ class Prefiller(Instance):
         super().__init__(iid, inst, cost, ready_t)
         self.v_p = v_prefill
         self.queue: list[tuple[SimRequest, float]] = []   # (req, remaining)
+        self._inflight_cache: Optional[float] = None
 
     def inflight_tokens(self) -> float:
-        return sum(r for _, r in self.queue)
+        # cached, invalidated on any queue mutation; the recompute runs
+        # the identical reduction, so the value is bit-for-bit stable
+        v = self._inflight_cache
+        if v is None:
+            v = self._inflight_cache = sum(r for _, r in self.queue)
+        return v
 
     def prefill_velocity(self) -> float:
         return self.v_p
@@ -201,11 +236,14 @@ class Prefiller(Instance):
         if req.t_prefill_start < 0:
             req.t_prefill_start = t
         _priority_insert(self.queue, (req, req.prefill_tokens))
+        self._inflight_cache = None
 
     def advance(self, budget: float) -> list[SimRequest]:
         """Serialized head-of-line progress by `budget` tokens; returns
         requests whose prefill completed."""
         done = []
+        if self.queue and budget > 0:
+            self._inflight_cache = None
         while self.queue and budget > 0:
             req, rem = self.queue[0]
             take = min(rem, budget)
@@ -223,6 +261,20 @@ class Prefiller(Instance):
         if not self.ready(t):
             return []
         return self.advance(self.v_p * dt)
+
+    def check_aggregates(self):
+        """Invariant audit (mirrors ``KVAllocator.check``): the cached
+        inflight-token total must equal the from-scratch reduction."""
+        if self._inflight_cache is not None:
+            expect = sum(r for _, r in self.queue)
+            if self._inflight_cache != expect:
+                raise AssertionError(
+                    f"prefiller {self.iid}: inflight cache drift "
+                    f"{self._inflight_cache} != {expect}")
+        tail = [e[0].priority for e in self.queue[1:]]
+        if tail != sorted(tail):
+            raise AssertionError(
+                f"prefiller {self.iid}: queue tail not priority-sorted")
 
     @property
     def idle(self) -> bool:
@@ -246,20 +298,155 @@ class Decoder(Instance):
         # on-box convertible completions that found no blocks free wait
         # here for the shared pending_decode path (kv mode only)
         self.kv_spill: list[tuple[float, SimRequest]] = []
+        # ---- hot-path aggregates (DESIGN.md "Performance") ----
+        # float aggregates are dirty-flag caches over the identical
+        # from-scratch reduction (bitwise-stable); integer residency
+        # counters are maintained incrementally (integer math is exact)
+        self._mem_cache: Optional[float] = None     # mem_used (legacy path)
+        self._iter_cache: Optional[float] = None    # iter_time
+        self._pq_cache: Optional[float] = None      # inflight prefill toks
+        self._cap_cache: Optional[float] = None     # mem_cap (constant)
+        self._bucket_counts: dict[str, int] = {}    # bucket -> residents
+        self._prio_counts: dict[int, int] = {}      # class -> residents
+        # Σ (in_len + generated) over the batch, maintained incrementally
+        # while every contribution is a whole number (always true in the
+        # event engine: prompts are ints, tokens land one at a time) —
+        # integer-valued float adds are exact and order-independent, so
+        # this equals the sequential reduction bit-for-bit.  The first
+        # fractional fluid tick flips ``_ctx_exact`` and iter_time falls
+        # back to the cached from-scratch sum.
+        self._ctx_sum = 0.0
+        self._ctx_exact = True
+        # admission-generation stamps (event engine's iteration membership)
+        self._admit_seq = 0
+        self._iter_gen = 0
+
+    # ---- aggregate bookkeeping ----
+    def _invalidate(self):
+        """Drop the float caches: active membership or a resident's
+        context length changed."""
+        self._mem_cache = None
+        self._iter_cache = None
+
+    def _count_add(self, req: SimRequest):
+        bc = self._bucket_counts
+        bc[req.bucket_pred] = bc.get(req.bucket_pred, 0) + 1
+        pc = self._prio_counts
+        pc[req.priority] = pc.get(req.priority, 0) + 1
+        if self._ctx_exact:
+            c = req.src.in_len + req.generated
+            if float(c).is_integer():
+                self._ctx_sum += c
+            else:
+                self._ctx_exact = False
+
+    def _count_remove(self, req: SimRequest):
+        bc = self._bucket_counts
+        n = bc.get(req.bucket_pred, 0) - 1
+        if n <= 0:
+            bc.pop(req.bucket_pred, None)
+        else:
+            bc[req.bucket_pred] = n
+        pc = self._prio_counts
+        n = pc.get(req.priority, 0) - 1
+        if n <= 0:
+            pc.pop(req.priority, None)
+        else:
+            pc[req.priority] = n
+        if self._ctx_exact:
+            c = req.src.in_len + req.generated
+            if float(c).is_integer():
+                self._ctx_sum -= c
+            else:
+                self._ctx_exact = False
+
+    def remove_active(self, req: SimRequest):
+        """The one sanctioned way to pull a resident request out of the
+        batch (preemption): keeps the residency counters and caches in
+        step with ``active``."""
+        self.active.remove(req)
+        self._count_remove(req)
+        self._invalidate()
+
+    def max_resident_priority(self) -> int:
+        """Lowest-urgency (highest-value) priority class resident right
+        now, or -1 with an empty batch — the preemption fast path skips
+        decoders with no strictly-lower-priority victims without scanning
+        the batch."""
+        pc = self._prio_counts
+        return max(pc) if pc else -1
+
+    def check_aggregates(self):
+        """Invariant audit (mirrors ``KVAllocator.check``): every cached
+        aggregate must equal its from-scratch recomputation."""
+        c = self.cost
+        if self.kv is None and self._mem_cache is not None:
+            expect = sum((r.src.in_len + r.generated) * c.kv_tok
+                         + c.state_fix for r in self.active)
+            if self._mem_cache != expect:
+                raise AssertionError(
+                    f"decoder {self.iid}: mem_used cache drift "
+                    f"{self._mem_cache} != {expect}")
+        if self._pq_cache is not None:
+            expect = sum(rem for _, rem in self.prefill_q)
+            if self._pq_cache != expect:
+                raise AssertionError(
+                    f"decoder {self.iid}: inflight-token cache drift "
+                    f"{self._pq_cache} != {expect}")
+        if self._ctx_exact:
+            expect = sum(r.src.in_len + r.generated for r in self.active)
+            if self._ctx_sum != expect:
+                raise AssertionError(
+                    f"decoder {self.iid}: ctx-sum drift "
+                    f"{self._ctx_sum} != {expect}")
+        if self._iter_cache is not None:
+            cached = self._iter_cache
+            self._iter_cache = None
+            fresh = self.iter_time()
+            if cached != fresh:
+                raise AssertionError(
+                    f"decoder {self.iid}: iter_time cache drift "
+                    f"{cached} != {fresh}")
+        for bucket in {r.bucket_pred for r in self.active}:
+            expect_n = sum(1 for r in self.active
+                           if r.bucket_pred == bucket)
+            if self._bucket_counts.get(bucket, 0) != expect_n:
+                raise AssertionError(
+                    f"decoder {self.iid}: bucket count drift for "
+                    f"{bucket!r}")
+        if sum(self._bucket_counts.values()) != len(self.active):
+            raise AssertionError(
+                f"decoder {self.iid}: bucket counts don't cover the batch")
+        prio_expect: dict[int, int] = {}
+        for r in self.active:
+            prio_expect[r.priority] = prio_expect.get(r.priority, 0) + 1
+        if self._prio_counts != prio_expect:
+            raise AssertionError(
+                f"decoder {self.iid}: priority counts drift "
+                f"{self._prio_counts} != {prio_expect}")
 
     # ---- memory ----
     def mem_used(self) -> float:
         if self.kv is not None:
             return self.kv.used_bytes()
-        c = self.cost
-        return sum((r.src.in_len + r.generated) * c.kv_tok + c.state_fix
-                   for r in self.active)
+        m = self._mem_cache
+        if m is None:
+            c = self.cost
+            m = self._mem_cache = sum(
+                (r.src.in_len + r.generated) * c.kv_tok + c.state_fix
+                for r in self.active)
+        return m
 
     def mem_cap(self) -> float:
-        reserve = self.conv.mem_reserved if (self.is_convertible
-                                             and self.conv) else 0.0
-        return self.spec.hbm_cap * self.hbm_frac - self.cost.w_bytes \
-            - reserve
+        # constant once the decoder is provisioned (hbm_frac/convertible
+        # role are assigned before first use); computed lazily once
+        v = self._cap_cache
+        if v is None:
+            reserve = self.conv.mem_reserved if (self.is_convertible
+                                                 and self.conv) else 0.0
+            v = self._cap_cache = self.spec.hbm_cap * self.hbm_frac \
+                - self.cost.w_bytes - reserve
+        return v
 
     def mem_util(self) -> float:
         return min(self.mem_used() / max(self.mem_cap(), 1.0), 1.5)
@@ -275,11 +462,15 @@ class Decoder(Instance):
         return self.mem_used() + self._need_bytes(req) <= self.mem_cap()
 
     def inflight_of_bucket(self, bucket: str) -> int:
-        return sum(1 for r in self.active if r.bucket_pred == bucket)
+        # incrementally-maintained integer residency counter (exact)
+        return self._bucket_counts.get(bucket, 0)
 
     # ---- convertible prefill (Alg. 1 round 2 target) ----
     def inflight_tokens(self) -> float:
-        return sum(rem for _, rem in self.prefill_q)
+        v = self._pq_cache
+        if v is None:
+            v = self._pq_cache = sum(rem for _, rem in self.prefill_q)
+        return v
 
     def prefill_velocity(self) -> float:
         return self.conv.v_prefill if self.conv else 0.0
@@ -288,6 +479,8 @@ class Decoder(Instance):
         if req.t_prefill_start < 0:
             req.t_prefill_start = t
         _priority_insert(self.prefill_q, (req, req.prefill_tokens))
+        self._pq_cache = None
+        self._iter_cache = None    # mixed-iteration term keys off prefill_q
 
     def advance_prefill(self, budget: float, t: float) -> list[SimRequest]:
         """Restricted-velocity convertible prefill (Eq. 5); completed
@@ -297,6 +490,9 @@ class Decoder(Instance):
         blocks are free the request spills to ``pending_decode`` (drained
         by ``ClusterBase._admit_pending``) instead of overcommitting."""
         done = []
+        if self.prefill_q and budget > 0:
+            self._pq_cache = None
+            self._iter_cache = None
         while self.prefill_q and budget > 0:
             req, rem = self.prefill_q[0]
             take = min(rem, budget)
@@ -347,6 +543,10 @@ class Decoder(Instance):
             self.kv.admit(req.src.rid, self._need_bytes(req))
             req.kv_prefix = None
         self.active.append(req)
+        self._admit_seq += 1
+        req._res_gen = self._admit_seq
+        self._count_add(req)
+        self._invalidate()
 
     def _kv_release(self, req: SimRequest, t: float):
         """Free the finished request's blocks, leaving its prompt+output
@@ -356,12 +556,22 @@ class Decoder(Instance):
                             int(req.src.in_len + req.generated), t)
 
     def iter_time(self) -> float:
+        it = self._iter_cache
+        if it is None:
+            it = self._iter_cache = self._iter_time_fresh()
+        return it
+
+    def _iter_time_fresh(self) -> float:
         b = len(self.active)
         if b == 0:
             return 0.0
         c = self.cost
-        avg_ctx = sum(r.src.in_len + r.generated
-                      for r in self.active) / b
+        if self._ctx_exact:
+            # integer-exact running total == the sequential sum, bitwise
+            avg_ctx = self._ctx_sum / b
+        else:
+            avg_ctx = sum(r.src.in_len + r.generated
+                          for r in self.active) / b
         mem = c.aw_bytes + b * (c.kv_tok * avg_ctx + c.state_fix)
         f = b * (c.flops_tok + c.attn_coef * avg_ctx)
         if self.is_convertible and self.prefill_q and self.conv:
@@ -371,12 +581,19 @@ class Decoder(Instance):
             mem += max(chunk - b, 0) * c.kv_tok
         return max(mem / self.spec.hbm_bw, f / self.spec.flops)
 
+    #: batches at least this large take the vectorized fluid-tick path;
+    #: numpy's per-call overhead beats the Python loop beyond it.  Both
+    #: paths run the identical per-element IEEE-double operations, so the
+    #: results are bitwise equal either way (goldens + differential pin it)
+    _VEC_MIN_BATCH = 24
+
     def tick(self, t: float, dt: float) -> list[SimRequest]:
         """Fluid engine: advance decode (and convertible prefill) by dt.
         Returns finished requests.  ``generated`` is clamped at ``out_len``
         (no memory-accounting overshoot) and the final tick is prorated, so
         a request finishing mid-tick is billed only the fraction of the
-        tick it actually decoded."""
+        tick it actually decoded.  Large batches advance through numpy
+        (elementwise, same float ops as the scalar loop)."""
         if not self.ready(t):
             return []
         finished: list[SimRequest] = []
@@ -386,22 +603,51 @@ class Decoder(Instance):
         if it <= 0:
             return finished
         rate = dt / it                     # tokens per request this tick
-        for r in self.active:
-            remaining = max(r.src.out_len - r.generated, 0.0)
-            take = min(rate, remaining)
-            frac = take / rate if rate > 0 else 0.0
-            r.generated += take
-            r.decode_time += dt * frac
-            if r.t_first_token < 0 and r.generated >= 1.0 - 1e-9:
-                # end of the tick in which the first token completed
-                r.t_first_token = t + dt * frac
-            if remaining - take <= 1e-9:
-                r.generated = float(r.src.out_len)
-                r.t_finish = t + dt * frac
-                finished.append(r)
+        b = len(self.active)
+        self._invalidate()                 # every resident's length moves
+        self._ctx_exact = False            # fluid grants fractional tokens
+        if b >= self._VEC_MIN_BATCH:
+            out_len = np.fromiter((r.src.out_len for r in self.active),
+                                  np.float64, b)
+            gen = np.fromiter((r.generated for r in self.active),
+                              np.float64, b)
+            remaining = np.maximum(out_len - gen, 0.0)
+            take = np.minimum(rate, remaining)
+            frac = take / rate if rate > 0 else np.zeros(b)
+            dt_spent = dt * frac
+            new_gen = gen + take
+            first = new_gen >= 1.0 - 1e-9
+            done = (remaining - take) <= 1e-9
+            t_evt = t + dt_spent
+            for i, r in enumerate(self.active):
+                r.generated = float(new_gen[i])
+                r.decode_time += float(dt_spent[i])
+                if r.t_first_token < 0 and first[i]:
+                    r.t_first_token = float(t_evt[i])
+                if done[i]:
+                    r.generated = float(r.src.out_len)
+                    r.t_finish = float(t_evt[i])
+                    finished.append(r)
+        else:
+            for r in self.active:
+                remaining = max(r.src.out_len - r.generated, 0.0)
+                take = min(rate, remaining)
+                frac = take / rate if rate > 0 else 0.0
+                r.generated += take
+                r.decode_time += dt * frac
+                if r.t_first_token < 0 and r.generated >= 1.0 - 1e-9:
+                    # end of the tick in which the first token completed
+                    r.t_first_token = t + dt * frac
+                if remaining - take <= 1e-9:
+                    r.generated = float(r.src.out_len)
+                    r.t_finish = t + dt * frac
+                    finished.append(r)
         for r in finished:
             self._kv_release(r, r.t_finish)
-        self.active = [r for r in self.active if r.t_finish < 0]
+        if finished:
+            self.active = [r for r in self.active if r.t_finish < 0]
+            for r in finished:
+                self._count_remove(r)
         return finished
 
     @property
@@ -447,12 +693,20 @@ class ModelGroup:
         self.decode = decode
         self.convertible = convertible
         self.router = Router(BurstDetector())
+        # decode_instances() is probed per (pending request, pass) on the
+        # admission path; pool membership only changes inside
+        # ClusterBase._scale, which drops this cache
+        self._decode_cache: Optional[list] = None
 
     def conv_instances(self) -> list:
         return self.convertible.instances if self.convertible else []
 
     def decode_instances(self) -> list:
-        return self.decode.instances + self.conv_instances()
+        v = self._decode_cache
+        if v is None:
+            v = self._decode_cache = self.decode.instances \
+                + self.conv_instances()
+        return v
 
 
 class Fleet:
@@ -506,23 +760,54 @@ class SimReport:
     preemptions: list[tuple] = field(default_factory=list)
     # KV-tier counters (sim.kvcache.KVStats.summary(); {} when tiers off)
     kv: dict = field(default_factory=dict)
+    # events processed by the run (event engine; 0 for fluid) — the
+    # perf-bench suite's events/sec numerator (benchmarks/perf.py)
+    n_events: int = 0
 
     # ---- SLO metrics (§V) ----
     # Every metric optionally restricts to one priority class and/or one
     # model (multi-model fleets) and/or the preempted slice; SLO targets
     # are per-class (core.router.ttft_slo / tpot_slo).
+    # Filtered views and per-metric value vectors are memoized per filter
+    # key (reports are read-only once a run ends): bench tables that probe
+    # many percentiles over the same slice extract and sort each slice
+    # once instead of per metric.
 
     def _pool(self, priority: Optional[int] = None,
               model: Optional[str] = None,
               preempted: Optional[bool] = None) -> list[SimRequest]:
-        reqs = self.requests
-        if priority is not None:
-            reqs = [r for r in reqs if r.priority == priority]
-        if model is not None:
-            reqs = [r for r in reqs if r.model == model]
-        if preempted is not None:
-            reqs = [r for r in reqs if (r.n_evictions > 0) == preempted]
+        cache = self.__dict__.setdefault("_pool_cache", {})
+        key = (priority, model, preempted)
+        reqs = cache.get(key)
+        if reqs is None:
+            reqs = self.requests
+            if priority is not None:
+                reqs = [r for r in reqs if r.priority == priority]
+            if model is not None:
+                reqs = [r for r in reqs if r.model == model]
+            if preempted is not None:
+                reqs = [r for r in reqs if (r.n_evictions > 0) == preempted]
+            cache[key] = reqs
         return reqs
+
+    def _finished_vals(self, what: str, priority: Optional[int],
+                       model: Optional[str], preempted: Optional[bool]
+                       ) -> tuple[np.ndarray, np.ndarray]:
+        """(values-in-request-order, sorted-values) for one metric over
+        one filtered slice.  ``mean`` consumes the former (numpy's pairwise
+        sum is order-sensitive, and the seed code averaged in request
+        order); percentiles consume the latter — an order statistic is
+        order-blind, so sorting once per (metric, slice) is free."""
+        cache = self.__dict__.setdefault("_vals_cache", {})
+        key = (what, priority, model, preempted)
+        out = cache.get(key)
+        if out is None:
+            vals = [getattr(r, what)
+                    for r in self._pool(priority, model, preempted)
+                    if r.t_finish >= 0 and getattr(r, what) >= 0]
+            arr = np.asarray(vals, dtype=np.float64)
+            out = cache[key] = (arr, np.sort(arr))
+        return out
 
     def priority_classes(self) -> list[int]:
         return sorted({r.priority for r in self.requests})
@@ -567,19 +852,16 @@ class SimReport:
     def mean(self, what: str, priority: Optional[int] = None,
              model: Optional[str] = None,
              preempted: Optional[bool] = None) -> float:
-        vals = [getattr(r, what)
-                for r in self._pool(priority, model, preempted)
-                if r.t_finish >= 0 and getattr(r, what) >= 0]
-        return float(np.mean(vals)) if vals else float("nan")
+        vals, _ = self._finished_vals(what, priority, model, preempted)
+        return float(np.mean(vals)) if len(vals) else float("nan")
 
     def percentile(self, what: str, q: float,
                    priority: Optional[int] = None,
                    model: Optional[str] = None,
                    preempted: Optional[bool] = None) -> float:
-        vals = [getattr(r, what)
-                for r in self._pool(priority, model, preempted)
-                if r.t_finish >= 0 and getattr(r, what) >= 0]
-        return float(np.percentile(vals, q)) if vals else float("nan")
+        _, svals = self._finished_vals(what, priority, model, preempted)
+        return float(np.percentile(svals, q)) if len(svals) \
+            else float("nan")
 
     # ---- canonical metric schemas (golden fixtures + regen share these,
     # so the regenerator and the regression test can never drift apart) --
@@ -669,7 +951,8 @@ class ClusterBase:
                  init_prefillers: int = 1, init_decoders: int = 1,
                  dt: float = 0.025, scale_interval: float = 1.0,
                  max_instances: int = 64,
-                 preemption: "PreemptionPolicy | str" = "none"):
+                 preemption: "PreemptionPolicy | str" = "none",
+                 snapshot_interval: Optional[float] = None):
         if isinstance(cfg, Fleet):
             fleet = cfg
             fpolicy = policy if policy is not None else inst_spec
@@ -696,6 +979,10 @@ class ClusterBase:
         self.dt = dt
         self.scale_interval = scale_interval
         self.max_instances = max_instances
+        # timeline snapshot cadence; None = adaptive (the historical 0.2 s
+        # up to ~13-minute horizons, then stretched to cap the timeline at
+        # ~4000 rows so multi-hour traces don't grow it unboundedly)
+        self.snapshot_interval = snapshot_interval
         # KV-tier subsystem (sim.kvcache): one stats sink shared by every
         # decoder's allocator; enabled per pool via PoolSpec.block_size
         self.kv_stats = KVStats()
@@ -714,13 +1001,20 @@ class ClusterBase:
         self.cost = g.decode.cost
         self.conv_cfg = g.convertible.conv_cfg if g.convertible else None
         self.router = g.router
-        self.pending_decode: list[tuple[float, SimRequest]] = []  # (ready_t,…)
+        # (ready_t, req) entries, kept sorted by the admission key
+        # (priority, ready_t, rid) — ``_admit_pending`` historically
+        # re-sorted the whole list on every call; bisect inserts keep the
+        # identical order with O(log n) per entry instead
+        self.pending_decode: list[tuple[float, SimRequest]] = []
+        # kept sorted by (priority, arrival t, rid) — the §IV-E drain's
+        # historical per-call sort key — via bisect inserts
         self.wait_queue: list[SimRequest] = []
         self.finished: list[SimRequest] = []
         self.gpu_seconds = 0.0
         self.timeline: list[dict] = []
-        # rolling 1-s gateway counters
-        self._arrivals: list[tuple[float, SimRequest]] = []
+        # rolling 1-s gateway counters (deque: the 5 s window expires from
+        # the left instead of rebuilding the list on every arrival)
+        self._arrivals: deque[tuple[float, SimRequest]] = deque()
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -812,6 +1106,21 @@ class ClusterBase:
                 f"request {req.src.rid} targets model {model!r} but the "
                 f"fleet serves {sorted(self.fleet.groups)}")
 
+    # ---- queue maintenance -------------------------------------------
+    @staticmethod
+    def _pending_key(entry: tuple[float, "SimRequest"]) -> tuple:
+        return (entry[1].priority, entry[0], entry[1].src.rid)
+
+    @staticmethod
+    def _wait_key(req: "SimRequest") -> tuple:
+        return (req.priority, req.src.t, req.src.rid)
+
+    def _pending_add(self, entry: tuple[float, "SimRequest"]):
+        insort(self.pending_decode, entry, key=self._pending_key)
+
+    def _wait_add(self, req: "SimRequest"):
+        insort(self.wait_queue, req, key=self._wait_key)
+
     # ------------------------------------------------------------------
     def _submit_prefill_work(self, tgt, kind: str, req: SimRequest, t: float):
         """Hand a routed request to its prefill target.  Engines override to
@@ -828,8 +1137,10 @@ class ClusterBase:
             req.src.in_len, req.src.out_len)
         if self._kv_on:
             self._kv_lookup(g, req, t)
-        self._arrivals.append((t, req))
-        self._arrivals = [(ts, r) for ts, r in self._arrivals if t - ts <= 5.0]
+        arrivals = self._arrivals
+        arrivals.append((t, req))
+        while t - arrivals[0][0] > 5.0:
+            arrivals.popleft()
         is_ts = isinstance(self.policy.model_policy(g.model),
                            TokenScalePolicy)
         convs = g.conv_instances()
@@ -850,7 +1161,7 @@ class ClusterBase:
             self._submit_prefill_work(tgt, kind, req, t)
         else:
             # Alg.1 line 15: central queue, re-evaluated as load changes
-            self.wait_queue.append(req)
+            self._wait_add(req)
 
     def _ready(self, insts, t: float):
         return [i for i in insts if i.ready(t) and not i.draining]
@@ -859,28 +1170,55 @@ class ClusterBase:
         """§IV-E: as load changes (scale-ups, drained convertibles), pending
         prefill tasks are re-evaluated and re-assigned — higher priority
         classes first, FIFO within a class, each within its own model's
-        pools."""
+        pools.  ``wait_queue`` is maintained in exactly that order
+        (``_wait_add``), so the historical per-call sort is gone.
+
+        Failure short-circuit (O(1) amortized per queued request): within
+        one pass nothing a failing request observes improves — successful
+        submissions only *add* in-flight prefill work, ready/draining
+        states are frozen at ``t``, and an idle prefiller cannot appear
+        mid-pass — so once a request of some model fails both routing
+        rounds with no idle fallback, every later request of that model
+        with an equal-or-tighter TTFT budget must fail identically.  Those
+        skip straight to the carry-over without re-scanning the pools
+        (the historical full scan made overload quadratic in queue
+        length).  The ready-candidate lists are likewise frozen per pass
+        and computed once per model."""
+        if not self.wait_queue:
+            return
         still = []
-        for req in sorted(self.wait_queue,
-                          key=lambda r: (r.priority, r.src.t, r.src.rid)):
+        ready_cache: dict[str, tuple[list, list]] = {}
+        failed_slo: dict[str, float] = {}   # model -> widest failed budget
+        for req in list(self.wait_queue):
             g = self._group_of(req)
-            is_ts = isinstance(self.policy.model_policy(g.model),
-                               TokenScalePolicy)
+            m = g.model
+            slo = ttft_slo(req.src.in_len, req.priority)
+            f = failed_slo.get(m)
+            if f is not None and slo <= f:
+                still.append(req)
+                continue
+            cached = ready_cache.get(m)
+            if cached is None:
+                is_ts = isinstance(self.policy.model_policy(m),
+                                   TokenScalePolicy)
+                cached = ready_cache[m] = (
+                    self._ready(g.prefill.instances, t),
+                    self._ready(g.conv_instances(), t) if is_ts else [])
+            pres, convs = cached
             tgt, kind = g.router.route_prefill(
-                req.src.in_len, self._ready(g.prefill.instances, t),
-                self._ready(g.conv_instances(), t) if is_ts else [], t,
-                priority=req.priority)
+                req.src.in_len, pres, convs, t, priority=req.priority)
             if kind is not None:
                 self._submit_prefill_work(tgt, kind, req, t)
             else:
                 # work conservation: an idle prefiller always takes work,
                 # even if the SLO is already forfeited
-                idle = [p for p in self._ready(g.prefill.instances, t)
-                        if p.idle]
+                idle = [p for p in pres if p.idle]
                 if idle:
                     self._submit_prefill_work(idle[0], "prefiller", req, t)
                 else:
                     still.append(req)
+                    if f is None or slo > f:
+                        failed_slo[m] = slo
         self.wait_queue = still
 
     def _kv_lookup(self, g: ModelGroup, req: SimRequest, t: float):
@@ -926,7 +1264,7 @@ class ClusterBase:
         delay = hw.kvc_transfer_time(g.prefill.cfg, g.prefill.inst,
                                      req.src.in_len - req.kv_hit_tokens)
         entry = (t + delay, req)
-        self.pending_decode.append(entry)
+        self._pending_add(entry)
         return entry
 
     def _admit_pending(self, t: float):
@@ -937,46 +1275,98 @@ class ClusterBase:
         nowhere may instead evict/pause strictly-lower-priority resident
         work (the fluid engine reaches this via its per-tick retry; the
         event engine via exact admission events).  Candidates are always
-        the request's own model's decode + convertible pools."""
+        the request's own model's decode + convertible pools.
+
+        ``pending_decode`` is maintained in admission order
+        (priority, ready_t, rid) — see ``_pending_add`` — so each pass
+        walks it without the historical per-call sort.
+
+        Failure short-circuit (legacy byte-counter fleets): within one
+        pass decoder memory only shrinks — admissions consume it, nothing
+        completes mid-pass — so once a request fails on every candidate,
+        any later same-model request reserving at least as many bytes
+        must fail identically and skips the candidate scan.  The pass
+        walks most-urgent-first, so a later request's preemption victims
+        are a subset of an earlier one's, preserving the implication for
+        the eviction path too; a successful preemption can leave its host
+        with *more* free memory than before, so it resets the
+        short-circuit.  Paged-KV fleets skip the fast path: prefix pins
+        make the reservation per-decoder."""
         if self._kv_on:
             # on-box convertible completions that found no blocks free
-            for x in self.decoders + self.convertibles:
-                if x.kv_spill:
-                    self.pending_decode.extend(x.kv_spill)
-                    x.kv_spill = []
+            for pool in self.pools.values():
+                if pool.spec.role == "prefill":
+                    continue
+                for x in pool.instances:
+                    if x.kv_spill:
+                        for e in x.kv_spill:
+                            self._pending_add(e)
+                        x.kv_spill = []
+        if not self.pending_decode:
+            return
         rest = []
-        queue = sorted(self.pending_decode,
-                       key=lambda e: (e[1].priority, e[0], e[1].src.rid))
+        queue = self.pending_decode
         self.pending_decode = []      # evicted victims re-enter here
+        fast = not self._kv_on
+        failed_need: dict[str, float] = {}   # model -> min failed bytes
         for ready_t, req in queue:
             if ready_t > t:
                 rest.append((ready_t, req))
                 continue
             g = self._group_of(req)
-            cands = [x for x in g.decode_instances()
-                     if x.ready(t) and not x.draining and x.can_admit(req)]
             kp = req.kv_prefix
+            need = 0.0
+            preempted = False
             if kp is not None:
                 # prefix affinity: the hit is only free on the owner with
                 # the blocks in HBM; anything else pays a one-time stall
                 # (swap-in / migration / recompute) and retries
-                if kp[2] == "hbm" and kp[0] in cands:
-                    d: Optional[Decoder] = kp[0]
+                owner = kp[0]
+                if kp[2] == "hbm" and owner.live and owner.ready(t) \
+                        and not owner.draining and owner.can_admit(req):
+                    d: Optional[Decoder] = owner
                 else:
                     self._kv_prefix_penalty(req, t)
                     continue
             else:
+                if fast:
+                    c = g.decode.cost
+                    need = (req.src.in_len + req.src.out_len) * c.kv_tok \
+                        + c.state_fix
+                    f = failed_need.get(g.model)
+                    if f is not None and need >= f:
+                        rest.append((ready_t, req))
+                        continue
+                cands = [x for x in g.decode_instances()
+                         if x.ready(t) and not x.draining
+                         and x.can_admit(req)]
                 d = g.router.route_decode(req.bucket_pred, cands)
                 if d is None and self.preemption.enabled:
+                    n_log = len(self.preemption_log)
                     d = self._preempt_for(req, t)
+                    preempted = len(self.preemption_log) > n_log
             if d is None:
                 rest.append((ready_t, req))
+                if fast and not preempted:
+                    f = failed_need.get(g.model)
+                    if f is None or need < f:
+                        failed_need[g.model] = need
             else:
                 if req.t_kv_ready < 0:     # keep the first KV-ready stamp
                     req.t_kv_ready = ready_t   # across preemption re-entries
                 d.admit(req, t)
                 self._after_admit(d, t)
-        self.pending_decode = rest + self.pending_decode
+            if preempted:
+                # evictions can leave the host with more free memory than
+                # before the pass saw it: re-arm the scan
+                failed_need.pop(g.model, None)
+        # merge the survivors (an ordered subsequence of the sorted pass)
+        # with entries requeued during it (penalties / evicted victims,
+        # already insort-ordered) — the list stays admission-ordered
+        if self.pending_decode:
+            rest = list(heapq.merge(rest, self.pending_decode,
+                                    key=self._pending_key))
+        self.pending_decode = rest
 
     def _kv_prefix_penalty(self, req: SimRequest, t: float):
         """The cached prefix is not immediately usable: its owner can't
@@ -1000,7 +1390,7 @@ class ClusterBase:
         kv.unpin(req.src.rid)
         req.kv_prefix = None
         entry = (t + delay, req)
-        self.pending_decode.append(entry)
+        self._pending_add(entry)
         self._on_requeue(entry)
 
     def _after_admit(self, d: Decoder, t: float):
@@ -1044,6 +1434,11 @@ class ClusterBase:
         best, best_key = None, None
         for d in g.decode_instances():
             if not d.ready(t) or d.draining:
+                continue
+            # fast path: the residency-class counter says whether any
+            # strictly-lower-priority victim exists before scanning the
+            # batch — most retries during a burst fail here
+            if d.max_resident_priority() <= req.priority:
                 continue
             victims = [v for v in d.active
                        if v.t_finish < 0 and v.priority > req.priority]
@@ -1091,7 +1486,7 @@ class ClusterBase:
         with the preemptor; the stall is the swap-in at the tier's
         bandwidth) and fall back to a recompute only when the tier is
         full."""
-        d.active.remove(victim)
+        d.remove_active(victim)
         victim.n_evictions += 1
         ctx = int(victim.src.in_len + victim.generated)
         g = self._group_of(victim)
@@ -1127,7 +1522,7 @@ class ClusterBase:
         self.preemption_log.append(
             (t, victim.priority, preemptor.priority, victim.generated))
         entry = (t + delay, victim)
-        self.pending_decode.append(entry)
+        self._pending_add(entry)
         self._on_requeue(entry)
 
     def _on_requeue(self, entry: tuple[float, SimRequest]):
@@ -1198,11 +1593,24 @@ class ClusterBase:
                 idle = [i for i in pool.instances if i.idle]
                 if not idle:
                     break
+                idle[-1].live = False
                 pool.instances.remove(idle[-1])
+        for g in self.fleet.groups.values():
+            g._decode_cache = None
         self._after_scale(t)
 
     def _after_scale(self, t: float):
         """Engine hook: schedule wake-ups for newly provisioned instances."""
+
+    def _snapshot_every(self, t_end: float) -> float:
+        """Timeline snapshot cadence: the explicit ``snapshot_interval``
+        knob, else the historical 0.2 s stretched so a run never records
+        more than ~4000 rows (multi-hour traces previously grew the
+        timeline unboundedly)."""
+        si = self.snapshot_interval
+        if si is None:
+            si = max(0.2, t_end / 4000.0)
+        return si
 
     # ------------------------------------------------------------------
     def _gpu_count(self, t: float) -> int:
@@ -1247,7 +1655,8 @@ class ClusterBase:
                          self.gpu_seconds, t_end, self.timeline,
                          engine=self.engine,
                          preemptions=list(self.preemption_log),
-                         kv=self.kv_stats.summary() if self._kv_on else {})
+                         kv=self.kv_stats.summary() if self._kv_on else {},
+                         n_events=getattr(self, "n_events", 0))
 
 
 def _pred_out(req: SimRequest) -> int:

@@ -155,6 +155,17 @@ class KVAllocator:
         self.pins: dict[int, _Pin] = {}               # rid -> arrival pin
         self.dram_free = cfg.n_dram
         self.tickets: dict[int, int] = {}      # rid -> swapped-out blocks
+        # ---- admission-path cache (DESIGN.md "Performance") ----
+        # ``available()`` walks every cache entry's blocks; on the hot
+        # admission path it is probed once per (pending request, candidate
+        # decoder) pair.  The allocator state version bumps on any ref/pin
+        # /session mutation and keys a memo of the identical recompute.
+        self._ver = 0
+        self._avail_ver = -1
+        self._avail_val = 0
+
+    def _mutated(self):
+        self._ver += 1
 
     # ---- geometry ----------------------------------------------------
     def blocks_for(self, nbytes: float) -> int:
@@ -184,12 +195,17 @@ class KVAllocator:
 
     def available(self) -> int:
         """Free blocks plus blocks reclaimable from unpinned cache
-        entries (cached prefixes never block an admission)."""
-        reclaimable = sum(
-            1 for e in self.sessions.values()
-            if e.tier == "hbm" and e.pins == 0
-            for b in e.ids if self.ref[b] == 1)
-        return len(self.free) + reclaimable
+        entries (cached prefixes never block an admission).  Memoized on
+        the allocator state version — the recompute is the identical
+        reduction, so the value is bitwise what the seed code returned."""
+        if self._avail_ver != self._ver:
+            reclaimable = sum(
+                1 for e in self.sessions.values()
+                if e.tier == "hbm" and e.pins == 0
+                for b in e.ids if self.ref[b] == 1)
+            self._avail_val = len(self.free) + reclaimable
+            self._avail_ver = self._ver
+        return self._avail_val
 
     def can_admit(self, rid: int, nbytes: float) -> bool:
         return self.need_blocks(rid, nbytes) <= self.available()
@@ -207,9 +223,11 @@ class KVAllocator:
 
     # ---- internal ref bookkeeping ------------------------------------
     def _incref(self, b: int):
+        self._mutated()
         self.ref[b] = self.ref.get(b, 0) + 1
 
     def _decref(self, b: int):
+        self._mutated()
         n = self.ref.get(b, 0)
         if n <= 0:
             raise KVError(f"double free of block {b}")
@@ -251,6 +269,7 @@ class KVAllocator:
         return out
 
     def _drop_entry(self, sid: int):
+        self._mutated()
         e = self.sessions.pop(sid)
         if e.tier == "hbm":
             for b in e.ids:
@@ -298,6 +317,7 @@ class KVAllocator:
         block, DRAM pins just hold the entry against eviction."""
         if rid in self.pins:
             raise KVError(f"request {rid} already holds a pin")
+        self._mutated()
         e = self.sessions[sid]
         e.last_use = t
         e.pins += 1
@@ -314,6 +334,7 @@ class KVAllocator:
         pin = self.pins.pop(rid, None)
         if pin is None:
             return
+        self._mutated()
         pin.entry.pins -= 1
         for b in pin.ids:
             self._hard_dec(b)
@@ -327,6 +348,7 @@ class KVAllocator:
         backpressure)."""
         if rid in self.allocs:
             raise KVError(f"request {rid} admitted twice")
+        self._mutated()
         pin = self.pins.pop(rid, None)
         shared: list[int] = []
         shared_tokens = 0

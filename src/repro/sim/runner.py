@@ -117,7 +117,8 @@ def run_spec(spec: ExperimentSpec,
         fleet, policy=PerModelFleetPolicy(policies),
         predictor=OutputPredictor(spec.predictor_accuracy, spec.seed),
         dt=spec.dt, preemption=spec.preemption,
-        max_instances=spec.max_instances)
+        max_instances=spec.max_instances,
+        snapshot_interval=spec.snapshot_interval)
     return cl.run(trace, spec.duration + spec.extra_horizon)
 
 

@@ -30,7 +30,7 @@ PRIORITY_CLASSES = {"interactive": 0, "standard": 1, "batch": 2}
 DEFAULT_PRIORITY_MIX = {0: 0.2, 1: 0.6, 2: 0.2}
 
 
-@dataclass
+@dataclass(slots=True)
 class TraceRequest:
     rid: int
     t: float
@@ -233,6 +233,43 @@ def get_trace(name: str, duration_s: float = 120.0, rps: float = 8.0,
                               session_prob)
     return generate(TRACES[name], duration_s, rps, seed, priority_mix,
                     session_prob)
+
+
+def stream_trace(name: str, duration_s: float, rps: float, seed: int = 0,
+                 chunk_s: float = 300.0,
+                 priority_mix: dict[int, float] | None = None
+                 ) -> Iterator[TraceRequest]:
+    """Yield arrivals in time order without materializing the whole trace.
+
+    Million-request, multi-hour workloads (``benchmarks/perf.py``'s
+    perfscale suite) would hold the entire request list — and, with the
+    historical eager pre-push, the entire event heap — in memory at once.
+    This generator produces the workload in ``chunk_s``-long windows:
+    each chunk is an independent seeded ``generate`` (seed stream
+    ``seed + 31 * i``) shifted to its window start, so the stream is
+    deterministic in ``seed``, has the same ON/OFF burst structure and
+    lognormal lengths per window, and the consumer (``EventCluster.run``
+    feeds arrivals lazily) keeps only live requests resident.
+
+    Request ids are globally sequential.  Note the chunk boundary resets
+    the burst phase (each window draws its own ON/OFF timeline) — fine
+    for throughput/scale benches; use ``generate`` when a single
+    continuous burst process matters."""
+    spec = TRACES[name]
+    rid = 0
+    t0 = 0.0
+    i = 0
+    while t0 < duration_s:
+        horizon = min(chunk_s, duration_s - t0)
+        part = generate(spec, horizon, rps, seed + 31 * i,
+                        priority_mix=priority_mix)
+        for r in part:
+            r.rid = rid
+            r.t += t0
+            rid += 1
+            yield r
+        t0 += horizon
+        i += 1
 
 
 def varying_rate_trace(segments: list[tuple[float, float]],

@@ -1,0 +1,330 @@
+"""Perf-rework invariants: cached hot-path aggregates == from-scratch truth.
+
+The O(1) hot-path rework (DESIGN.md "Performance") replaced per-call
+reductions over ``Decoder.active`` / ``Prefiller.queue`` with dirty-flag
+caches, incremental integer counters, and an exact-integer context sum.
+A missed invalidation would silently skew admission/routing, so — in the
+spirit of ``KVAllocator.check()`` — ``check_aggregates`` re-derives every
+aggregate from first principles, and these tests call it
+
+  * after every step of a 2000-op randomized admit/evict/advance/finish
+    fuzz driven directly against a ``Decoder`` + ``Prefiller`` pair, and
+  * after end-to-end runs of both engines on the contended
+    preemption-heavy fleet (where eviction churn is maximal).
+
+The file also pins the behavior-preserving contracts of the rework that
+the golden fixtures cover only indirectly: bisect queue inserts match the
+historical linear scan, the incremental burst-detector windows match the
+historical rebuild-and-resum, lazy streamed arrivals match an eager list,
+the snapshot-cadence knob, and SimReport's memoized metrics.
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import CHIPS, InstanceSpec, profile
+from repro.core.router import BurstDetector
+from repro.sim.instances import (Decoder, ModelCost, Prefiller, SimRequest,
+                                 _priority_insert)
+from repro.sim.runner import get_engine, run_policy
+from repro.sim.traces import (DEFAULT_PRIORITY_MIX, TraceRequest, get_trace,
+                              stream_trace)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_config("llama31_8b")
+
+
+@pytest.fixture(scope="module")
+def inst():
+    return InstanceSpec(CHIPS["a100"], 1)
+
+
+@pytest.fixture(scope="module")
+def cost(cfg):
+    return ModelCost.of(cfg)
+
+
+# ---------------------------------------------------------------------------
+# 2000-op randomized fuzz (mirrors the KVAllocator per-op check())
+# ---------------------------------------------------------------------------
+
+def test_decoder_prefiller_aggregate_fuzz(inst, cost):
+    rng = np.random.RandomState(0)
+    d = Decoder(1, inst, cost, 0.0)
+    p = Prefiller(2, inst, cost, 0.0, v_prefill=9000.0)
+    rid = 0
+    t = 0.0
+    for step in range(2000):
+        op = rng.randint(6)
+        t += float(rng.uniform(0.0, 0.05))
+        if op == 0:                                   # admit a fresh request
+            r = SimRequest(TraceRequest(rid, t, int(rng.randint(32, 4096)),
+                                        int(rng.randint(16, 640)),
+                                        priority=int(rng.randint(3))))
+            r.bucket_pred = ["S-S", "M-M", "L-L"][rng.randint(3)]
+            rid += 1
+            d.admit(r, t)
+        elif op == 1 and d.active:                    # evict a random victim
+            d.remove_active(d.active[rng.randint(len(d.active))])
+        elif op == 2 and d.active:                    # fluid tick (fractional
+            d.tick(t, float(rng.uniform(0.001, 0.2)))  # grants + finishes)
+        elif op == 3:                                 # prefill submit
+            r = SimRequest(TraceRequest(rid, t, int(rng.randint(32, 4096)),
+                                        int(rng.randint(16, 640)),
+                                        priority=int(rng.randint(3))))
+            rid += 1
+            if rng.rand() < 0.5:
+                p.submit(r, t)
+            else:
+                d.submit_prefill(r, t)
+        elif op == 4:                                 # prefill progress
+            p.advance(float(rng.uniform(0.0, 5000.0)))
+            d.advance_prefill(float(rng.uniform(0.0, 2000.0)), t)
+        else:                                         # probe (fills caches)
+            d.mem_used()
+            d.iter_time()
+            d.inflight_tokens()
+            d.inflight_of_bucket("M-M")
+            p.inflight_tokens()
+        d.check_aggregates()
+        p.check_aggregates()
+    assert rid > 100                                  # the fuzz did work
+
+
+@pytest.mark.parametrize("engine", ["fluid", "events"])
+@pytest.mark.parametrize("preemption", ["evict-lowest", "pause-requeue"])
+def test_e2e_aggregates_audit(engine, preemption):
+    """After a contended preemption-heavy run, every instance's cached
+    aggregates must equal their from-scratch recomputation."""
+    cl = []
+    eng_cls = get_engine(engine)
+
+    class Audited(eng_cls):
+        def _report(self, t_end):
+            cl.append(self)
+            return super()._report(t_end)
+
+    from repro.core import OutputPredictor, single_pool_fleet
+    from repro.core.autoscaler import build_policy
+    from repro.core.fleet import PerModelFleetPolicy
+    from repro.sim.runner import build_fleet
+    fs = single_pool_fleet("qwen25_32b", "a100", 2, trace="burstgpt2",
+                           rps=8.0, n_convertible=1,
+                           priority_mix=DEFAULT_PRIORITY_MIX)
+    fleet = build_fleet(fs)
+    g = fleet.groups["qwen25_32b"]
+    pol = build_policy("tokenscale", g.prefill.prof,
+                       decode_prof=g.decode.prof, mean_in=640.0,
+                       mean_out=350.0, n_convertible=1)
+    eng = Audited(fleet, policy=PerModelFleetPolicy({"qwen25_32b": pol}),
+                  predictor=OutputPredictor(0.85, 0), max_instances=2,
+                  preemption=preemption)
+    trace = get_trace("burstgpt2", 15.0, 8.0, seed=0,
+                      priority_mix=DEFAULT_PRIORITY_MIX)
+    eng.run(trace, 20.0)
+    (run_cl,) = cl
+    audited = 0
+    for pool in run_cl.pools.values():
+        for i in pool.instances:
+            i.check_aggregates()
+            audited += 1
+    assert audited >= 3          # prefill + decode + convertible pools
+
+
+# ---------------------------------------------------------------------------
+# bisect inserts == the historical linear scan
+# ---------------------------------------------------------------------------
+
+def _reference_insert(queue, entry):
+    """The pre-rework linear scan, verbatim."""
+    req = entry[0]
+    for j in range(1 if queue else 0, len(queue)):
+        if queue[j][0].priority > req.priority:
+            queue.insert(j, entry)
+            return
+    queue.append(entry)
+
+
+def test_priority_insert_matches_reference():
+    rng = np.random.RandomState(1)
+    fast: list = []
+    ref: list = []
+    for rid in range(500):
+        r = SimRequest(TraceRequest(rid, 0.0, 64, 16,
+                                    priority=int(rng.randint(4))))
+        _priority_insert(fast, (r, float(rid)))
+        _reference_insert(ref, (r, float(rid)))
+        assert [e[0].src.rid for e in fast] == [e[0].src.rid for e in ref]
+        # heads pop like the engines pop them
+        if rng.rand() < 0.3 and fast:
+            fast.pop(0)
+            ref.pop(0)
+
+
+# ---------------------------------------------------------------------------
+# incremental burst-detector windows == the historical rebuild/resum
+# ---------------------------------------------------------------------------
+
+class _ReferenceBurst:
+    """The pre-rework list-rebuild implementation, verbatim."""
+
+    def __init__(self, short_s=1.0, long_s=60.0):
+        self.short_s, self.long_s = short_s, long_s
+        self._events: list = []
+
+    def observe(self, t, tokens):
+        self._events.append((t, tokens))
+        self._events = [e for e in self._events if t - e[0] <= self.long_s]
+
+    def _short_h(self, t):
+        return min(self.short_s, max(t / 2.0, 1e-3))
+
+    def rates(self, t):
+        short_h = self._short_h(t)
+        short = sum(v for ts, v in self._events if t - ts <= short_h) \
+            / short_h
+        long_h = min(self.long_s, max(t, 1e-3))
+        long = sum(v for ts, v in self._events) / long_h
+        return short, long
+
+
+def test_burst_detector_matches_reference():
+    rng = np.random.RandomState(2)
+    b = BurstDetector()
+    ref = _ReferenceBurst()
+    t = 0.0
+    for _ in range(3000):
+        t += float(rng.exponential(0.2))
+        tokens = int(rng.randint(32, 8192))      # integer prompt lengths
+        b.observe(t, tokens)
+        ref.observe(t, tokens)
+        s1, l1 = b.rates(t)
+        s2, l2 = ref.rates(t)
+        assert s1 == s2 and l1 == l2             # bitwise, not approx
+
+
+# ---------------------------------------------------------------------------
+# lazy streamed arrivals == an eager list
+# ---------------------------------------------------------------------------
+
+def test_event_engine_streaming_matches_list():
+    stream = stream_trace("azure_conv", 40.0, 6.0, seed=0, chunk_s=10.0)
+    eager = list(stream_trace("azure_conv", 40.0, 6.0, seed=0, chunk_s=10.0))
+    assert len(eager) > 100
+
+    def _run(trace):
+        from repro.core import OutputPredictor, single_pool_fleet
+        from repro.core.autoscaler import build_policy
+        from repro.core.fleet import PerModelFleetPolicy
+        from repro.sim.events import EventCluster
+        from repro.sim.runner import build_fleet
+        fs = single_pool_fleet("llama31_8b", "a100", 1, trace="azure_conv",
+                               rps=6.0, n_convertible=1)
+        fleet = build_fleet(fs)
+        g = fleet.groups["llama31_8b"]
+        pol = build_policy("tokenscale", g.prefill.prof,
+                           decode_prof=g.decode.prof,
+                           mean_in=1024.0, mean_out=240.0, n_convertible=1)
+        cl = EventCluster(fleet,
+                          policy=PerModelFleetPolicy({"llama31_8b": pol}),
+                          predictor=OutputPredictor(0.85, 0))
+        return cl.run(trace, duration=50.0)
+    a = _run(eager)                      # list path (sorted eagerly)
+    b = _run(stream_trace("azure_conv", 40.0, 6.0, seed=0, chunk_s=10.0))
+    assert a.summary() == b.summary()
+    assert [r.src.rid for r in a.requests] == [r.src.rid for r in b.requests]
+
+
+def test_streaming_trace_requires_duration():
+    from repro.sim.events import EventCluster
+    from repro.core import TokenScalePolicy
+    cfg = get_config("llama31_8b")
+    inst = InstanceSpec(CHIPS["a100"], 1)
+    prof = profile(cfg, inst)
+    cl = EventCluster(cfg, inst, prof, TokenScalePolicy(prof, convertible=0))
+    with pytest.raises(ValueError, match="duration"):
+        cl.run(iter([]), duration=None)
+
+
+def test_unsorted_stream_fails_loudly():
+    """An out-of-order streaming iterator must raise, not silently
+    corrupt the piecewise-constant GPU integral."""
+    from repro.core import TokenScalePolicy
+    cfg = get_config("llama31_8b")
+    inst = InstanceSpec(CHIPS["a100"], 1)
+    prof = profile(cfg, inst)
+    cl = get_engine("events")(cfg, inst, prof,
+                              TokenScalePolicy(prof, convertible=0))
+    bad = iter([TraceRequest(0, 5.0, 64, 16), TraceRequest(1, 2.0, 64, 16)])
+    with pytest.raises(ValueError, match="not sorted"):
+        cl.run(bad, duration=10.0)
+
+
+def test_stream_trace_is_deterministic_and_ordered():
+    a = list(stream_trace("azure_code", 50.0, 5.0, seed=3, chunk_s=13.0))
+    b = list(stream_trace("azure_code", 50.0, 5.0, seed=3, chunk_s=13.0))
+    assert [(r.rid, r.t, r.in_len, r.out_len) for r in a] \
+        == [(r.rid, r.t, r.in_len, r.out_len) for r in b]
+    ts = [r.t for r in a]
+    assert ts == sorted(ts)
+    assert [r.rid for r in a] == list(range(len(a)))
+
+
+# ---------------------------------------------------------------------------
+# snapshot cadence knob
+# ---------------------------------------------------------------------------
+
+def test_snapshot_interval_knob_and_adaptive_default():
+    from repro.core import ExperimentSpec, single_pool_fleet
+    fs = single_pool_fleet("llama31_8b", "a100", 1, trace="azure_conv",
+                           rps=4.0)
+    # explicit knob: ~duration / interval rows
+    spec = ExperimentSpec(fleet=fs, duration=10.0, extra_horizon=0.0,
+                          engine="events", snapshot_interval=1.0)
+    from repro.sim.runner import run_spec
+    rep = run_spec(spec)
+    assert 8 <= len(rep.timeline) <= 12
+    # spec JSON stays on the pre-knob schema when the knob is unset (the
+    # hetero golden's recorded spec dict must reproduce byte-identically)
+    d = ExperimentSpec(fleet=fs).to_dict()
+    assert "snapshot_interval" not in d
+    d2 = ExperimentSpec(fleet=fs, snapshot_interval=0.5).to_dict()
+    assert d2["snapshot_interval"] == 0.5
+    again = ExperimentSpec.from_dict(d2)
+    assert again.snapshot_interval == 0.5
+
+
+def test_adaptive_snapshot_cadence_caps_timeline():
+    cfg = get_config("llama31_8b")
+    inst = InstanceSpec(CHIPS["a100"], 1)
+    prof = profile(cfg, inst)
+    from repro.core import TokenScalePolicy
+    cl = get_engine("events")(cfg, inst, prof,
+                              TokenScalePolicy(prof, convertible=0))
+    # historical horizons keep the historical 0.2 s cadence...
+    assert cl._snapshot_every(120.0) == 0.2
+    assert cl._snapshot_every(800.0) == 0.2
+    # ...multi-hour horizons stretch it to cap the timeline at ~4000 rows
+    assert cl._snapshot_every(36000.0) == pytest.approx(9.0)
+
+
+# ---------------------------------------------------------------------------
+# SimReport memoization
+# ---------------------------------------------------------------------------
+
+def test_report_metric_memoization_is_stable():
+    rep = run_policy("tokenscale", "azure_conv", duration=20.0, rps=6.0,
+                     seed=0, engine="events")
+    fresh = run_policy("tokenscale", "azure_conv", duration=20.0, rps=6.0,
+                       seed=0, engine="events")
+    # repeated queries hit the memo and stay bitwise equal to a fresh run
+    for _ in range(2):
+        assert rep.percentile("ttft", 99) == fresh.percentile("ttft", 99)
+        assert rep.percentile("ttft", 99.9) == fresh.percentile("ttft", 99.9)
+        assert rep.mean("tpot") == fresh.mean("tpot")
+        assert rep.summary() == fresh.summary()
+    # the memo key includes every filter axis
+    assert rep._pool(priority=1) is rep._pool(priority=1)
+    assert rep._pool(priority=1) is not rep._pool(priority=0)
