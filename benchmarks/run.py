@@ -564,6 +564,53 @@ def kvtiers():
         emit("kvtiers", f"{pre},peak_blocks_frac", ks["peak_blocks_frac"])
 
 
+#: the deflection fleet: llama31-8B on A100-TP1 driven hard enough that
+#: the prefill path saturates during bursts (the 6-instance cap keeps
+#: scale-out from absorbing them before the 5 s startup) — the regime
+#: where Alg. 1 rounds 1-2 fail and round 2b (chunked deflection onto
+#: regular decoders) is the only rapid-response path left.
+DEFLECT_CFG = dict(model="llama31_8b", chip="a100", tp=1, duration=60.0,
+                   rps=40.0, seed=0, max_instances=6)
+DEFLECT_TRACES = ["burstgpt1", "burstgpt2"]
+#: variant -> PoolSpec.prefill_chunking (0 = legacy wholesale conversion)
+DEFLECT_VARIANTS = {"wholesale": 0, "chunked": 2048}
+
+
+def run_deflect_variant(variant: str, trace: str = "burstgpt1",
+                        duration: float = None, engine: str = "events"):
+    """One deflect bench cell (shared with the golden regenerator and the
+    smoke row, so the fixture and the bench can never drift apart)."""
+    cfg = dict(DEFLECT_CFG)
+    if duration is not None:
+        cfg["duration"] = duration
+    return run_policy("tokenscale", trace, engine=engine,
+                      prefill_chunking=DEFLECT_VARIANTS[variant], **cfg)
+
+
+def deflect():
+    """Whole-instance conversion vs chunked prefill deflection on the
+    burst traces, at event fidelity (chunk boundaries are exact events
+    there — the fluid engine smears exactly the burst-tail TTFTs this
+    bench compares).  The acceptance gradient: chunked deflection beats
+    wholesale conversion on p99 TTFT on both traces while resident p99
+    TPOT stays inside the Eq. 5 budget (pinned by
+    tests/golden/deflect_burst.json)."""
+    for trace in DEFLECT_TRACES:
+        for variant in DEFLECT_VARIANTS:
+            rep = run_deflect_variant(variant, trace)
+            pre = f"{trace},{variant}"
+            emit("deflect", f"{pre},requests", len(rep.requests))
+            emit("deflect", f"{pre},ttft_p99_ms",
+                 1e3 * rep.percentile("ttft", 99))
+            emit("deflect", f"{pre},ttft_p999_ms",
+                 1e3 * rep.percentile("ttft", 99.9))
+            emit("deflect", f"{pre},tpot_p99_ms",
+                 1e3 * rep.percentile("tpot", 99))
+            emit("deflect", f"{pre},slo_pct", 100 * rep.slo_attainment())
+            emit("deflect", f"{pre},avg_gpus", rep.avg_gpus())
+            emit("deflect", f"{pre},deflected", rep.n_deflected)
+
+
 def hetero():
     """Heterogeneous fleet (a100-TP2 prefill + h100-TP1 decode pools) and
     a two-model cluster, each through both engines via the same
@@ -602,8 +649,9 @@ def smoke():
     """~15 s sanity pass for scripts/check.sh: one small config through
     both engines, a tails smoke row (priority classes + preemption
     through the event engine), a heterogeneous-fleet row (mixed chips/TP
-    through run_spec), and a kvtiers row (paged KV + host-DRAM swap +
-    prefix reuse on the contended fleet)."""
+    through run_spec), a kvtiers row (paged KV + host-DRAM swap + prefix
+    reuse on the contended fleet), and a deflect row (chunked prefill
+    deflection on the saturated burst fleet)."""
     from repro.sim.traces import DEFAULT_PRIORITY_MIX
     for eng in ["fluid", "events"]:
         rep = run_policy("tokenscale", "azure_conv", duration=20.0, rps=6.0,
@@ -632,6 +680,11 @@ def smoke():
     emit("smoke", "kvtiers,prefix_hit_rate_pct",
          100 * ks["prefix_hit_rate"])
     emit("smoke", "kvtiers,peak_blocks_frac", ks["peak_blocks_frac"])
+    rep = run_deflect_variant("chunked", duration=20.0)
+    emit("smoke", "deflect,requests", len(rep.requests))
+    emit("smoke", "deflect,deflected", rep.n_deflected)
+    emit("smoke", "deflect,ttft_p99_ms", 1e3 * rep.percentile("ttft", 99))
+    emit("smoke", "deflect,tpot_p99_ms", 1e3 * rep.percentile("tpot", 99))
 
 
 def perfscale():
@@ -684,6 +737,7 @@ BENCHES = {
     "diffval": diffval,
     "tails": tails,
     "kvtiers": kvtiers,
+    "deflect": deflect,
     "hetero": hetero,
     "perfscale": perfscale,
     "smoke": smoke,

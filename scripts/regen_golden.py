@@ -119,6 +119,35 @@ def regen_kvtiers():
     return "kvtiers_session.json", out
 
 
+def regen_deflect():
+    """Chunked-deflection golden on the saturated burst fleet
+    (benchmarks.run.run_deflect_variant, so the fixture and the bench
+    share one recipe): per-variant summary through both engines, pinning
+    the acceptance gradient — chunked deflection beats wholesale
+    conversion on p99 TTFT while resident p99 TPOT stays inside the
+    TPOT SLO."""
+    from benchmarks.run import DEFLECT_CFG, DEFLECT_VARIANTS, \
+        run_deflect_variant
+    duration = 30.0                       # reduced horizon for CI budget
+    trace = "burstgpt1"
+    out = {"trace": trace, "duration": duration,
+           "fleet": dict(DEFLECT_CFG),
+           "variants": dict(DEFLECT_VARIANTS),
+           "engines": {}}
+    out["fleet"]["duration"] = duration
+    for eng in ["fluid", "events"]:
+        rows = {}
+        for variant in DEFLECT_VARIANTS:
+            rep = run_deflect_variant(variant, trace, duration=duration,
+                                      engine=eng)
+            s = rep.summary()             # schema shared with the test
+            s["tpot_p99"] = rep.percentile("tpot", 99)
+            s["n_deflected"] = rep.n_deflected
+            rows[variant] = s
+        out["engines"][eng] = rows
+    return "deflect_burst.json", out
+
+
 def render(spec: dict) -> str:
     return json.dumps(spec, indent=2) + "\n"
 
@@ -133,7 +162,8 @@ def main(argv=None):
     for name, spec in [regen_tokenscale_azure_conv(),
                        regen_priority_preemption(),
                        regen_hetero_fleet(),
-                       regen_kvtiers()]:
+                       regen_kvtiers(),
+                       regen_deflect()]:
         path = os.path.join(HERE, name)
         text = render(spec)
         if args.check:

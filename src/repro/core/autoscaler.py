@@ -43,6 +43,11 @@ class Observation:
     tpot_p99: float = 0.0
     cur_prefillers: int = 1
     cur_decoders: int = 1
+    # prefill tok/s the decode side is absorbing itself via chunked
+    # deflection — the fraction of the arrival rate that partially-
+    # prefilled requests no longer owe the prefill pool (0 with the
+    # legacy wholesale-conversion path)
+    deflected_rate: float = 0.0
 
 
 @dataclass
@@ -105,9 +110,14 @@ class TokenScalePolicy(Policy):
 
     def decide(self, obs: Observation) -> ScaleDecision:
         # Eq. (2): prefillers from the input token arrival rate vs the
-        # slower of prefill/network velocity
+        # slower of prefill/network velocity.  Chunk-deflected work is
+        # subtracted first: a partially-prefilled request contributes only
+        # the tokens the prefill pool still owes, so the decode side's own
+        # absorption never provisions phantom prefillers (with chunking
+        # off deflected_rate is 0.0 and this is the historical expression)
         v_eff = min(self.prof.v_prefill, self.prof.v_network)
-        i_p = math.ceil(obs.token_rate_in / max(v_eff, 1e-9))
+        rate = max(obs.token_rate_in - obs.deflected_rate, 0.0)
+        i_p = math.ceil(rate / max(v_eff, 1e-9))
         # Eq. (3): decoders summed per bucket, at the decode pool's velocity
         i_d_f = sum(rate / max(self.dprof.v_decode.get(b, 1e9), 1e-9)
                     for b, rate in obs.token_rate_by_bucket.items())

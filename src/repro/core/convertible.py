@@ -50,23 +50,38 @@ def plan_convertible(cfg: ModelConfig, inst: InstanceSpec,
 
 
 def default_convertible_plan(cfg: ModelConfig, inst: InstanceSpec,
-                             prof) -> ConvertibleConfig:
+                             prof, max_decoders: int = 8
+                             ) -> ConvertibleConfig:
     """The standard offline plan used by the experiment runner: expected
     decode batch = half the M-M SLO-feasible batch from the pool's own
-    velocity profile, a mid-range context, and the §II-C burst-ratio /
-    fleet-size constants the paper's evaluation uses.  Each convertible
-    pool plans against *its own* (model, chip, tp) profile, so
-    heterogeneous fleets restrict each pool correctly (Eq. 5-6)."""
+    velocity profile, a mid-range context, and the §II-C burst-ratio
+    constant the paper's evaluation uses.  Each convertible pool plans
+    against *its own* (model, chip, tp) profile, so heterogeneous fleets
+    restrict each pool correctly (Eq. 5-6).  ``max_decoders`` is the
+    fleet's actual decode-pool ceiling (§IV-C2 sizes the pool as
+    ceil(max decoders x burst ratio)); ``sim.runner.build_fleet`` plumbs
+    the experiment's instance cap through, and the historical 8 remains
+    the default for direct callers."""
     return plan_convertible(
         cfg, inst,
         expected_decode_batch=max(prof.max_batch.get("M-M", 16) // 2, 1),
-        avg_ctx=1200.0, burst_ratio=0.2, max_decoders=8)
+        avg_ctx=1200.0, burst_ratio=0.2, max_decoders=max_decoders)
 
 
 def burst_ratio_of_trace(arrivals, window_s: float = 60.0,
                          factor: float = 1.0) -> float:
     """Fraction of tokens arriving above the running-average trendline
-    (the §II-C burst definition, used to size the pool offline)."""
+    (the §II-C burst definition, used to size the pool offline).
+
+    The baseline for second *i* is the mean of the preceding ``window_s``
+    seconds, *excluding* second i itself: a spike that joins its own
+    trendline dampens the very signal it should trigger (a 10x second
+    over a window of 10 raises its own baseline by ~2x).  Second 0 has no
+    history and is never counted as burst.  Evaluated with cumulative
+    sums — O(n) over the trace span instead of the historical
+    O(n * window) Python loop (tests/test_bugfixes.py pins both the
+    vectorization and the self-exclusion against a brute-force
+    reference)."""
     import numpy as np
     arrivals = sorted(arrivals, key=lambda r: r[0])
     if not arrivals:
@@ -79,10 +94,15 @@ def burst_ratio_of_trace(arrivals, window_s: float = 60.0,
     idx = np.clip(np.searchsorted(grid, ts, side="right") - 1, 0,
                   len(grid) - 1)
     np.add.at(per_sec, idx, toks)
-    burst_tok = 0.0
-    for i in range(len(grid)):
-        lo = max(0, i - int(window_s))
-        avg = per_sec[lo:i + 1].mean()
-        if per_sec[i] > factor * avg:
-            burst_tok += per_sec[i] - factor * avg
+    n = len(grid)
+    i = np.arange(n)
+    lo = np.maximum(0, i - int(window_s))
+    # prefix[k] = per_sec[:k].sum(); baseline window is [lo, i) — strictly
+    # before second i
+    prefix = np.concatenate(([0.0], np.cumsum(per_sec)))
+    count = (i - lo).astype(np.float64)
+    avg = np.where(count > 0,
+                   (prefix[i] - prefix[lo]) / np.maximum(count, 1.0),
+                   np.inf)             # no history -> never above baseline
+    burst_tok = float(np.maximum(per_sec - factor * avg, 0.0).sum())
     return float(burst_tok / max(toks.sum(), 1e-9))

@@ -70,6 +70,14 @@ class PoolSpec:
     # retain finished requests' prompt+output blocks in a per-decoder
     # prefix tree for copy-on-write reuse by same-session follow-ups
     prefix_cache: bool = False
+    # ---- chunked prefill / deflection (decode/convertible roles) ----
+    # > 0 switches the pool's decoders from whole-instance conversion to
+    # per-iteration chunked prefill: prompts split into chunks of at most
+    # this many tokens, each co-scheduled inside a decode iteration and
+    # re-capped online against Eq. 5's TPOT headroom.  On decode pools it
+    # additionally makes the instances deflection targets (Alg. 1 round
+    # 2b).  0 keeps the legacy wholesale-conversion path byte-for-byte.
+    prefill_chunking: int = 0
 
     def __post_init__(self):
         if self.role not in ROLES:
@@ -82,6 +90,13 @@ class PoolSpec:
         if not 0.0 < self.hbm_frac <= 1.0:
             raise ValueError(
                 f"pool {self.name!r}: hbm_frac must be in (0, 1]")
+        if self.prefill_chunking < 0:
+            raise ValueError(
+                f"pool {self.name!r}: prefill_chunking must be >= 0")
+        if self.prefill_chunking > 0 and self.role == "prefill":
+            raise ValueError(
+                f"pool {self.name!r}: prefill_chunking applies to decode-"
+                "side pools (prefillers always run whole prompts)")
 
     @property
     def key(self) -> tuple[str, str, int]:
@@ -158,13 +173,16 @@ def single_pool_fleet(model: str = "llama31_8b", chip: str = "a100",
                       block_size: int = 0,
                       hbm_frac: float = 0.9,
                       offload_gb: Optional[float] = None,
-                      prefix_cache: bool = False) -> FleetSpec:
+                      prefix_cache: bool = False,
+                      prefill_chunking: int = 0) -> FleetSpec:
     """The classic homogeneous PD fleet as a one-model spec — what the
     legacy ``run_policy(policy, trace, model, chip, tp, ...)`` signature
-    desugars to.  The KV-tier knobs apply to the decode-side pools; the
-    defaults keep the legacy flat-byte-counter accounting."""
+    desugars to.  The KV-tier knobs and ``prefill_chunking`` apply to the
+    decode-side pools; the defaults keep the legacy flat-byte-counter,
+    wholesale-conversion behavior."""
     kv = dict(block_size=block_size, hbm_frac=hbm_frac,
-              offload_gb=offload_gb, prefix_cache=prefix_cache)
+              offload_gb=offload_gb, prefix_cache=prefix_cache,
+              prefill_chunking=prefill_chunking)
     pools = [
         PoolSpec("prefill", "prefill", model, chip, tp, init=init_prefillers,
                  hbm_frac=hbm_frac),
@@ -207,6 +225,12 @@ class ExperimentSpec:
             # identical to the pre-knob schema (the hetero golden records
             # a spec dict and must reproduce byte-for-byte)
             d.pop("snapshot_interval")
+        for p in d["fleet"]["pools"]:
+            # same schema-stability rule for the chunking knob: pools that
+            # keep the legacy wholesale-conversion default serialize
+            # exactly as they did before the knob existed
+            if not p.get("prefill_chunking"):
+                p.pop("prefill_chunking", None)
         return d
 
     def to_json(self, **kw) -> str:
@@ -254,6 +278,9 @@ class PoolSnapshot:
     inflight_tokens: float = 0.0   # prefill tokens not yet processed
     inflight: int = 0              # resident decode requests
     mem_util: float = 0.0          # mean HBM utilization of ready instances
+    # prefill tok/s this decode-side pool absorbs via chunked deflection
+    # (0 with chunking off or no queued chunk work)
+    deflected_rate: float = 0.0
 
 
 @dataclass
@@ -306,7 +333,9 @@ def flat_observation(model: str, obs: FleetObservation) -> Observation:
         prefill_queue=pre.queue_requests + gw.queued,
         decode_inflight=dec.inflight + sum(c.inflight for c in conv),
         mem_util=dec.mem_util,
-        cur_prefillers=pre.count, cur_decoders=dec.count)
+        cur_prefillers=pre.count, cur_decoders=dec.count,
+        deflected_rate=dec.deflected_rate
+        + sum(c.deflected_rate for c in conv))
 
 
 class FleetPolicy:

@@ -4,8 +4,12 @@ Production traces carry length statistics but not prompt content, so —
 exactly like the paper (§V, "we simulate an output predictor used in a prior
 work, setting its accuracy to 85%") — the predictor is simulated at a
 configurable accuracy: with prob `accuracy` it returns the true bucket,
-otherwise a neighboring bucket.  The bucket taxonomy is Table II's 3x3
-input-output grid.
+otherwise a *uniformly chosen different* output class for the same input
+class (S can mispredict as L: the paper specifies only the accuracy, not
+an error taxonomy, and the uniform-error model is the adversarial choice —
+an ordinal neighbor-biased model would understate the cost of
+mispredictions for the decode load balancer).  The bucket taxonomy is
+Table II's 3x3 input-output grid.
 """
 from __future__ import annotations
 

@@ -147,18 +147,31 @@ class Router:
     # ---- Alg. 1 ------------------------------------------------------
     def route_prefill(self, in_len: int, prefillers: list,
                       convertibles: list, now: float,
-                      priority: int = PRIORITY_STANDARD):
+                      priority: int = PRIORITY_STANDARD,
+                      deflectables: list = ()):
         """Returns (target, kind) with kind in {"prefiller", "convertible",
-        None}; None means queue (line 15).  Feasibility is judged against
-        the request's per-class TTFT SLO, so batch traffic accepts busier
-        targets instead of competing for the rapid-response path.
+        "deflect", None}; None means queue (line 15).  Feasibility is
+        judged against the request's per-class TTFT SLO, so batch traffic
+        accepts busier targets instead of competing for the rapid-response
+        path.
 
         Heterogeneous fleets: candidates may span pools of differing
         prefill velocity (mixed chips/TP).  Feasibility is per-target —
         estimated wait = that instance's in-flight tokens / *its own*
         velocity — and each round scans faster targets first (a stable
         sort, so homogeneous fleets keep the historical first-feasible
-        order byte-for-byte)."""
+        order byte-for-byte).
+
+        ``deflectables`` (round 2b, chunked-prefill pools only): regular
+        decoders whose iterations can co-schedule prompt chunks.  Reached
+        only when the prefill queue already threatens the per-class TTFT
+        SLO (rounds 1-2 failed); the decision weighs that queue delay
+        against each decoder's mixed-iteration slack — its Eq. 5 headroom
+        expressed as an absorption velocity — and deflects to the decoder
+        that finishes the prompt soonest, provided that still lands within
+        the SLO.  Decoders with no TPOT headroom advertise zero velocity
+        and are never chosen, so deflection cannot form on an overloaded
+        decode pool."""
         slo = ttft_slo(in_len, priority)
         for p in _by_velocity(prefillers):        # round 1 (lines 1-7)
             wait = p.inflight_tokens() / max(p.prefill_velocity(), 1e-9)
@@ -168,6 +181,17 @@ class Router:
             wait = d.inflight_tokens() / max(d.prefill_velocity(), 1e-9)
             if wait <= slo:
                 return d, "convertible"
+        if deflectables:                          # round 2b: deflection
+            best, best_eta = None, float("inf")
+            for d in deflectables:
+                v = d.deflect_velocity()
+                if v <= 0.0:
+                    continue
+                eta = (d.inflight_tokens() + in_len) / v
+                if eta < best_eta:
+                    best, best_eta = d, eta
+            if best is not None and best_eta <= slo:
+                return best, "deflect"
         return None, None                         # line 15: enqueue
 
     # ---- decode load balancing ----------------------------------------

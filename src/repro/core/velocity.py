@@ -197,3 +197,57 @@ def reserved_memory(v_dp: float, mem_per_token: float,
                     ttft_slo: float) -> float:
     """Eq. (6): Mem_reserved = V_D^{P'} * Mem_T * TTFT_SLO."""
     return v_dp * mem_per_token * ttft_slo
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill / deflection quantities (§III-D at iteration granularity)
+# ---------------------------------------------------------------------------
+
+def headroom_chunk_tokens(f_iter: float, mem_iter: float,
+                          flops_tok: float, kv_tok: float,
+                          flops: float, hbm_bw: float,
+                          tpot_budget: float, cap: float) -> float:
+    """Eq. 5's headroom evaluated *online* against the live batch: the
+    largest prefill chunk (whole tokens) a decoder can co-schedule in its
+    next iteration while the mixed iteration stays within ``tpot_budget``.
+
+    ``f_iter``/``mem_iter`` are the decode-only iteration's roofline terms
+    (FLOPs, bytes); each chunk token adds ``flops_tok`` FLOPs and
+    ``kv_tok`` KV-write bytes, so the roofline bound
+    ``max((mem_iter + c*kv_tok)/hbm_bw, (f_iter + c*flops_tok)/flops)`` is
+    monotone in ``c`` and the budget inverts in closed form — no profiling
+    sweep on the hot path."""
+    c_fl = (tpot_budget * flops - f_iter) / max(flops_tok, 1e-12)
+    if kv_tok > 0:
+        c_mem = (tpot_budget * hbm_bw - mem_iter) / kv_tok
+    else:                       # attention-free: no KV bytes per token
+        c_mem = float("inf")
+    return float(int(max(min(cap, c_fl, c_mem), 0.0)))
+
+
+def chunked_prefill_velocity(chunk_tokens: float, mixed_iter_t: float
+                             ) -> float:
+    """Steady-state absorption rate (tok/s) of chunk-interleaved prefill:
+    one chunk per mixed iteration.  This is the per-iteration analogue of
+    Eq. 5's V_D^{P'} (which assumes the iteration takes exactly TPOT_SLO)."""
+    if chunk_tokens <= 0 or mixed_iter_t <= 0:
+        return 0.0
+    return chunk_tokens / mixed_iter_t
+
+
+def deflected_prefill_rate(decoders, window_s: float = 1.0) -> float:
+    """Aggregate prefill-token rate (tok/s) the decode side is absorbing
+    through chunked deflection right now: for each decoder with queued
+    chunk work, the smaller of its absorption velocity and the work it
+    actually holds (a queue of 40 tokens cannot absorb 4000 tok/s for the
+    whole window).  ``TokenScalePolicy.decide`` subtracts this from Eq. 2's
+    arrival rate so partially-prefilled requests contribute only the
+    fraction the prefill pool still owes."""
+    total = 0.0
+    for d in decoders:
+        if not d.prefill_q:
+            continue
+        v = d.deflect_velocity()
+        if v > 0:
+            total += min(v, d.inflight_tokens() / max(window_s, 1e-9))
+    return total

@@ -45,6 +45,9 @@ class Cluster(ClusterBase):
         t_end = duration or (trace[-1].t + 60.0 if trace else 60.0)
         ti = 0
         t = 0.0
+        tick = 0        # exact tick index; float-accumulated t drifts, so
+                        # deriving the index as int(t / dt) skips or
+                        # duplicates snapshot rows on long traces
         next_scale = 0.0
         # snapshot cadence (0.2 s historically; adaptive past ~13 min so
         # multi-hour traces cap the timeline length — DESIGN.md §Perf)
@@ -84,7 +87,8 @@ class Cluster(ClusterBase):
                 gpus = self._gpu_count(t)
             # ---- accounting ----
             self.gpu_seconds += gpus * self.dt
-            if int(t / self.dt) % snap_mod == 0:
+            if tick % snap_mod == 0:
                 self.timeline.append(self._snapshot(t))
+            tick += 1
             t += self.dt
         return self._report(t_end)

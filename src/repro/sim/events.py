@@ -244,8 +244,18 @@ class EventCluster(ClusterBase):
             d.active = [r for r in d.active if r.t_finish < 0]
             for r in finished:
                 d._count_remove(r)
-        # co-scheduled convertible prefill progress (Eq. 5 restricted rate)
-        if d.is_convertible and d.prefill_q and d.conv:
+        # co-scheduled prefill progress
+        if d.chunking:
+            # chunked mode: the iteration executed exactly the chunk that
+            # was planned when it was scheduled — the queue advances by
+            # that budget and nothing else, so every chunk boundary is an
+            # exact event timestamp
+            chunk = d._iter_chunk
+            d._iter_chunk = 0.0
+            if chunk > 0 and d.prefill_q:
+                d.advance_prefill(chunk, t)
+        elif d.is_convertible and d.prefill_q and d.conv:
+            # legacy wholesale conversion (Eq. 5 restricted rate)
             d.advance_prefill(d.conv.v_prefill * it, t)
         self._admit_pending(t)             # memory freed by completions
         self._kick_decoder(d, t)
@@ -270,9 +280,26 @@ class EventCluster(ClusterBase):
             self._schedule_wake(d)
             return
         if d.active:
-            it = d.iter_time()
+            if d.chunking and d.prefill_q:
+                # mixed iteration: plan the chunk that fits Eq. 5's TPOT
+                # headroom *now* and stretch this iteration by exactly its
+                # roofline cost — the chunk lands at the iteration boundary
+                chunk = d.plan_chunk()
+                d._iter_chunk = chunk
+                it = d.mixed_iter_time(chunk) if chunk > 0 else d.iter_time()
+            else:
+                it = d.iter_time()
             d._iter_pending = True
             d._iter_gen = d._admit_seq     # membership cutoff stamp
+            self._push(t + it, "iter_done", d, it)
+        elif d.chunking and d.prefill_q:
+            # chunk-only iteration: no decode batch, so the chunk itself
+            # paces the event — each boundary is exact (no quantum)
+            chunk = d.plan_chunk()
+            d._iter_chunk = chunk
+            it = d.mixed_iter_time(chunk)
+            d._iter_pending = True
+            d._iter_gen = d._admit_seq
             self._push(t + it, "iter_done", d, it)
         elif d.is_convertible and d.prefill_q and d.conv:
             # prefill-only "iteration": no decode batch to pace it, so

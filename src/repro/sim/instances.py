@@ -50,8 +50,18 @@ from repro.core.hardware import InstanceSpec
 from repro.core.predictor import OutputPredictor
 from repro.core.router import (PRIORITY_STANDARD, BurstDetector, Router,
                                tpot_slo, ttft_slo)
-from repro.core.velocity import BUCKET_OUTPUT, VelocityProfile, bucket_of
+from repro.core.velocity import (BUCKET_OUTPUT, VelocityProfile, bucket_of,
+                                 chunked_prefill_velocity,
+                                 deflected_prefill_rate,
+                                 headroom_chunk_tokens)
 from repro.sim.kvcache import KVAllocator, KVStats, KVTierConfig
+
+#: chunked prefill: minimum per-iteration progress (tokens) once a chunk
+#: queue exists on a decoder whose batch has no Eq. 5 headroom left — the
+#: DynaServe-style starvation guard; without it a saturated batch could
+#: park deflected prompts indefinitely.  Kept small so the TPOT overshoot
+#: it can cause is bounded by ~64 tokens' roofline cost per iteration.
+MIN_DEFLECT_CHUNK = 64
 
 
 @dataclass(slots=True)
@@ -290,6 +300,13 @@ class Decoder(Instance):
         self.active: list[SimRequest] = []
         self.conv = conv
         self.prefill_q: list[tuple[SimRequest, float]] = []
+        # chunked prefill (PoolSpec.prefill_chunking, set by _spawn):
+        # tokens-per-chunk cap; 0 = legacy wholesale conversion.  The
+        # event engine records the chunk it planned for the in-flight
+        # iteration in _iter_chunk and advances the queue by exactly that
+        # budget when the iteration completes (exact chunk boundaries).
+        self.chunking = 0
+        self._iter_chunk = 0.0
         # KV-tier state (sim.kvcache): None keeps the legacy flat byte
         # counter byte-for-byte; ClusterBase._spawn attaches an allocator
         # when the pool sets block_size > 0
@@ -561,11 +578,14 @@ class Decoder(Instance):
             it = self._iter_cache = self._iter_time_fresh()
         return it
 
-    def _iter_time_fresh(self) -> float:
+    def _iter_terms(self) -> tuple[float, float]:
+        """(FLOPs, bytes) of one decode-only iteration over the current
+        batch — the roofline numerators shared by ``_iter_time_fresh`` and
+        the chunked-prefill mixed-iteration math."""
         b = len(self.active)
-        if b == 0:
-            return 0.0
         c = self.cost
+        if b == 0:
+            return 0.0, c.aw_bytes
         if self._ctx_exact:
             # integer-exact running total == the sequential sum, bitwise
             avg_ctx = self._ctx_sum / b
@@ -574,12 +594,84 @@ class Decoder(Instance):
                           for r in self.active) / b
         mem = c.aw_bytes + b * (c.kv_tok * avg_ctx + c.state_fix)
         f = b * (c.flops_tok + c.attn_coef * avg_ctx)
-        if self.is_convertible and self.prefill_q and self.conv:
-            # mixed iteration: the chunk occupies (chunk - batch) extra slots
+        return f, mem
+
+    def _iter_time_fresh(self) -> float:
+        b = len(self.active)
+        if b == 0:
+            return 0.0
+        f, mem = self._iter_terms()
+        if self.is_convertible and self.prefill_q and self.conv \
+                and not self.chunking:
+            # legacy wholesale conversion — mixed iteration: the chunk
+            # occupies (chunk - batch) extra slots.  (Chunked mode charges
+            # the actually-planned chunk via mixed_iter_time instead.)
+            c = self.cost
             chunk = self.conv.chunk_size
             f += max(chunk - b, 0) * c.flops_tok
             mem += max(chunk - b, 0) * c.kv_tok
         return max(mem / self.spec.hbm_bw, f / self.spec.flops)
+
+    # ---- chunked prefill (per-iteration co-scheduling) ----
+    def mixed_iter_time(self, chunk_tok: float) -> float:
+        """Iteration time with ``chunk_tok`` prefill tokens co-scheduled
+        next to the current decode batch (the chunk streams its KV writes
+        and linear FLOPs through the same roofline).  With an empty batch
+        this is the chunk-only iteration: weights still stream once."""
+        if not self.active and chunk_tok <= 0:
+            return 0.0
+        c = self.cost
+        f, mem = self._iter_terms()
+        f += chunk_tok * c.flops_tok
+        mem += chunk_tok * c.kv_tok
+        return max(mem / self.spec.hbm_bw, f / self.spec.flops)
+
+    def _tpot_budget(self) -> float:
+        """Eq. 5's TPOT budget for the *strictest* resident class (the
+        chunk must not push any resident past its own SLO); the global
+        default paces chunk-only iterations so admissions never wait
+        longer than one TPOT-scale boundary."""
+        pc = self._prio_counts
+        return tpot_slo(min(pc)) if pc else tpot_slo()
+
+    def _headroom_chunk(self) -> float:
+        """Online Eq. 5: the largest chunk (whole tokens, capped by the
+        pool's configured chunk size) the next iteration can co-schedule
+        while staying within ``_tpot_budget``.  0 when the batch alone
+        already exceeds the budget."""
+        cap = float(self.chunking)
+        if self.conv is not None:
+            cap = min(cap, float(self.conv.chunk_size))
+        if cap <= 0:
+            return 0.0
+        c = self.cost
+        f, mem = self._iter_terms()
+        return headroom_chunk_tokens(
+            f, mem, c.flops_tok, c.kv_tok, self.spec.flops,
+            self.spec.hbm_bw, self._tpot_budget(), cap)
+
+    def plan_chunk(self) -> float:
+        """The chunk the next iteration will actually execute: Eq. 5
+        headroom, floored at ``MIN_DEFLECT_CHUNK`` (starvation guard —
+        queued prompts always make progress, even against a batch with no
+        headroom) and capped by the work actually queued."""
+        if not self.chunking or not self.prefill_q:
+            return 0.0
+        c = max(self._headroom_chunk(), float(MIN_DEFLECT_CHUNK))
+        return min(c, self.inflight_tokens())
+
+    def deflect_velocity(self) -> float:
+        """Mixed-iteration slack as an absorption rate (tok/s): the Eq. 5
+        headroom chunk over the mixed iteration that would execute it.
+        Advertises 0 when the batch has less than the minimum chunk of
+        headroom — the router never *adds* deflected work to a decoder
+        that could only serve it through the starvation floor."""
+        if not self.chunking:
+            return 0.0
+        c = self._headroom_chunk()
+        if c < MIN_DEFLECT_CHUNK:
+            return 0.0
+        return chunked_prefill_velocity(c, self.mixed_iter_time(c))
 
     #: batches at least this large take the vectorized fluid-tick path;
     #: numpy's per-call overhead beats the Python loop beyond it.  Both
@@ -597,9 +689,20 @@ class Decoder(Instance):
         if not self.ready(t):
             return []
         finished: list[SimRequest] = []
-        if self.is_convertible and self.prefill_q and self.conv:
+        it_mix = 0.0
+        if self.chunking and self.prefill_q:
+            # per-tick approximation of chunk-interleaved execution: one
+            # planned chunk per mixed iteration, so queued prefill advances
+            # at chunk/iter tok/s while decode is paced by the same mixed
+            # iteration (the event engine runs the exact chunk boundaries)
+            chunk = self.plan_chunk()
+            if chunk > 0:
+                it_mix = self.mixed_iter_time(chunk)
+                if it_mix > 0:
+                    self.advance_prefill(chunk * dt / it_mix, t)
+        elif self.is_convertible and self.prefill_q and self.conv:
             self.advance_prefill(self.conv.v_prefill * dt, t)
-        it = self.iter_time()
+        it = it_mix if it_mix > 0 else self.iter_time()
         if it <= 0:
             return finished
         rate = dt / it                     # tokens per request this tick
@@ -693,6 +796,10 @@ class ModelGroup:
         self.decode = decode
         self.convertible = convertible
         self.router = Router(BurstDetector())
+        # deflection (Alg. 1 round 2b) is enabled per model by the decode
+        # pool's chunking knob; convertible pools with chunking keep their
+        # round-2 slot but execute chunk-interleaved instead of wholesale
+        self.deflect_on = decode.spec.prefill_chunking > 0
         # decode_instances() is probed per (pending request, pass) on the
         # admission path; pool membership only changes inside
         # ClusterBase._scale, which drops this cache
@@ -700,6 +807,11 @@ class ModelGroup:
 
     def conv_instances(self) -> list:
         return self.convertible.instances if self.convertible else []
+
+    def deflect_instances(self) -> list:
+        """Round-2b candidates: the regular decode pool's instances (the
+        convertibles are already round-2 targets)."""
+        return self.decode.instances if self.deflect_on else []
 
     def decode_instances(self) -> list:
         v = self._decode_cache
@@ -763,6 +875,9 @@ class SimReport:
     # events processed by the run (event engine; 0 for fluid) — the
     # perf-bench suite's events/sec numerator (benchmarks/perf.py)
     n_events: int = 0
+    # prompts the router deflected to regular decoders (Alg. 1 round 2b;
+    # 0 with chunking off)
+    n_deflected: int = 0
 
     # ---- SLO metrics (§V) ----
     # Every metric optionally restricts to one priority class and/or one
@@ -1011,6 +1126,7 @@ class ClusterBase:
         self.wait_queue: list[SimRequest] = []
         self.finished: list[SimRequest] = []
         self.gpu_seconds = 0.0
+        self.n_deflected = 0     # prompts routed to decoders (round 2b)
         self.timeline: list[dict] = []
         # rolling 1-s gateway counters (deque: the 5 s window expires from
         # the left instead of rebuilding the list on every arrival)
@@ -1043,6 +1159,7 @@ class ClusterBase:
                         conv=pool.conv_cfg if conv else None)
             i.is_convertible = conv
             i.hbm_frac = pool.spec.hbm_frac
+            i.chunking = pool.spec.prefill_chunking
             if pool.spec.block_size > 0 and pool.cost.kv_tok > 0:
                 i.kv = self._make_allocator(pool, i)
         i.pool = pool
@@ -1124,10 +1241,15 @@ class ClusterBase:
     # ------------------------------------------------------------------
     def _submit_prefill_work(self, tgt, kind: str, req: SimRequest, t: float):
         """Hand a routed request to its prefill target.  Engines override to
-        additionally schedule completion events."""
+        additionally schedule completion events.  Deflected requests share
+        the convertible on-box path (``Decoder.submit_prefill``): chunks
+        execute inside the target's decode iterations and the finished
+        prompt admits without a KVC transfer."""
         if kind == "prefiller":
             tgt.submit(req, t)
         else:
+            if kind == "deflect":
+                self.n_deflected += 1
             tgt.submit_prefill(req, t)
 
     def _on_arrival(self, req: SimRequest, t: float):
@@ -1156,7 +1278,8 @@ class ClusterBase:
         tgt, kind = g.router.route_prefill(
             req.src.in_len, self._ready(g.prefill.instances, t),
             self._ready(convs, t) if is_ts else [], t,
-            priority=req.priority)
+            priority=req.priority,
+            deflectables=self._ready(g.deflect_instances(), t))
         if kind is not None:
             self._submit_prefill_work(tgt, kind, req, t)
         else:
@@ -1183,7 +1306,12 @@ class ClusterBase:
         skip straight to the carry-over without re-scanning the pools
         (the historical full scan made overload quadratic in queue
         length).  The ready-candidate lists are likewise frozen per pass
-        and computed once per model."""
+        and computed once per model.  Deflection (round 2b) preserves the
+        monotonicity: its acceptance is a pure SLO test, and mid-pass
+        submissions only grow the deflected queues (the batches — and so
+        each decoder's absorption velocity — cannot change inside the
+        pass), so a failed budget still implies failure for every
+        equal-or-tighter one."""
         if not self.wait_queue:
             return
         still = []
@@ -1203,10 +1331,12 @@ class ClusterBase:
                                    TokenScalePolicy)
                 cached = ready_cache[m] = (
                     self._ready(g.prefill.instances, t),
-                    self._ready(g.conv_instances(), t) if is_ts else [])
-            pres, convs = cached
+                    self._ready(g.conv_instances(), t) if is_ts else [],
+                    self._ready(g.deflect_instances(), t))
+            pres, convs, defl = cached
             tgt, kind = g.router.route_prefill(
-                req.src.in_len, pres, convs, t, priority=req.priority)
+                req.src.in_len, pres, convs, t, priority=req.priority,
+                deflectables=defl)
             if kind is not None:
                 self._submit_prefill_work(tgt, kind, req, t)
             else:
@@ -1549,6 +1679,9 @@ class ClusterBase:
                                            for d in insts)
                 utils = [d.mem_util() for d in ready]
                 snap.mem_util = float(np.mean(utils)) if utils else 0.0
+                if pool.spec.prefill_chunking > 0:
+                    # chunked absorption in progress: Eq. 2 discounts it
+                    snap.deflected_rate = deflected_prefill_rate(ready)
             snaps[name] = snap
         win = [(ts, r) for ts, r in self._arrivals if t - ts <= 1.0]
         gateway: dict[str, GatewayStats] = {}
@@ -1656,7 +1789,8 @@ class ClusterBase:
                          engine=self.engine,
                          preemptions=list(self.preemption_log),
                          kv=self.kv_stats.summary() if self._kv_on else {},
-                         n_events=getattr(self, "n_events", 0))
+                         n_events=getattr(self, "n_events", 0),
+                         n_deflected=self.n_deflected)
 
 
 def _pred_out(req: SimRequest) -> int:

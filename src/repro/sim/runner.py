@@ -50,13 +50,15 @@ def get_engine(name: str):
 # ---------------------------------------------------------------------------
 
 def build_fleet(fs: FleetSpec,
-                profiles: Optional[dict[str, VelocityProfile]] = None
-                ) -> Fleet:
+                profiles: Optional[dict[str, VelocityProfile]] = None,
+                max_decoders: Optional[int] = None) -> Fleet:
     """Resolve a declarative ``FleetSpec`` into a runtime ``Fleet``: each
     pool gets its own model config, instance spec, (cached) velocity
     profile, and — for convertible pools — an Eq. 5-6 restriction planned
     against that pool's own hardware.  ``profiles`` overrides profiling
-    per pool name (e.g. the int8-KV what-if in ``benchmarks.run.kv8``)."""
+    per pool name (e.g. the int8-KV what-if in ``benchmarks.run.kv8``);
+    ``max_decoders`` feeds the §IV-C2 offline pool sizing (defaults to
+    the historical 8-decoder fleet when the caller has no scale cap)."""
     pools = []
     for ps in fs.pools:
         cfg = get_config(ps.model)
@@ -64,7 +66,8 @@ def build_fleet(fs: FleetSpec,
         prof = (profiles or {}).get(ps.name) \
             or profile_for(ps.model, ps.chip, ps.tp,
                            hbm_frac=ps.hbm_frac)
-        conv = default_convertible_plan(cfg, inst, prof) \
+        conv = default_convertible_plan(
+            cfg, inst, prof, max_decoders=max_decoders or 8) \
             if ps.role == "convertible" else None
         pools.append(Pool(ps, cfg, inst, prof, conv_cfg=conv))
     return Fleet(pools)
@@ -101,7 +104,8 @@ def run_spec(spec: ExperimentSpec,
              ) -> SimReport:
     """The pool-centric entry point: heterogeneous fleets and multi-model
     serving run end-to-end on either engine from one declarative spec."""
-    fleet = build_fleet(spec.fleet, profiles)
+    fleet = build_fleet(spec.fleet, profiles,
+                        max_decoders=spec.max_instances)
     trace = build_traces(spec)
     policies = {}
     for model, g in fleet.groups.items():
@@ -185,12 +189,15 @@ def run_policy(policy_name: str, trace_name: str = "mixed",
                block_size: int = 0,
                hbm_frac: float = 0.9,
                offload_gb: Optional[float] = None,
-               prefix_cache: bool = False) -> SimReport:
+               prefix_cache: bool = False,
+               prefill_chunking: int = 0) -> SimReport:
     """The classic single-pool experiment, desugared to a one-pool spec.
     Kept byte-stable with the pre-pool control plane (golden fixtures).
     The KV-tier knobs (``block_size``/``hbm_frac``/``offload_gb``/
-    ``prefix_cache``, sim.kvcache) and the multi-turn ``session_prob``
-    default to the legacy flat-byte-counter, single-turn behavior."""
+    ``prefix_cache``, sim.kvcache), the multi-turn ``session_prob``, and
+    the chunked-prefill/deflection knob ``prefill_chunking`` default to
+    the legacy flat-byte-counter, single-turn, wholesale-conversion
+    behavior."""
     n_conv = n_convertible if policy_name == "tokenscale" else 0
     fleet_spec = single_pool_fleet(model, chip, tp, trace=trace_name,
                                    rps=rps, n_convertible=n_conv,
@@ -199,7 +206,8 @@ def run_policy(policy_name: str, trace_name: str = "mixed",
                                    block_size=block_size,
                                    hbm_frac=hbm_frac,
                                    offload_gb=offload_gb,
-                                   prefix_cache=prefix_cache)
+                                   prefix_cache=prefix_cache,
+                                   prefill_chunking=prefill_chunking)
     spec = ExperimentSpec(
         fleet=fleet_spec, policy=policy_name, engine=engine,
         preemption=preemption, duration=duration, seed=seed, dt=dt,

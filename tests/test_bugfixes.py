@@ -10,17 +10,34 @@ One test (cluster) per fixed defect:
   4. burst detector normalizes both windows over their observed horizon,
      so an opening spike (t < 1 s) is detectable;
   5. ``_gpu_count`` bills exactly the provisioned fleet (booting + ready).
+
+PR-6 satellite bugfixes:
+  6. ``burst_ratio_of_trace`` vectorization (cumulative sums) matches a
+     brute-force reference, and second *i* is excluded from its own
+     baseline window;
+  7. the fluid engine's snapshot cadence uses an integer tick counter —
+     ``int(t / dt)`` on float-accumulated ``t`` drifts (rows 7/8/9 ticks
+     apart instead of exactly 8);
+  8. ``default_convertible_plan`` derives §IV-C2's pool sizing from the
+     experiment's actual instance cap instead of a hardcoded 8;
+  9. ``OutputPredictor`` mispredicts are uniform over the two *other*
+     output classes (the module docstring used to promise neighbor bias
+     it never implemented).
 """
+import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import CHIPS, InstanceSpec, TokenScalePolicy, profile
+from repro.core import (CHIPS, InstanceSpec, OutputPredictor,
+                        TokenScalePolicy, default_convertible_plan, profile,
+                        single_pool_fleet)
 from repro.core.autoscaler import _DownHysteresis
+from repro.core.convertible import burst_ratio_of_trace
 from repro.core.router import BurstDetector
 from repro.sim.cluster import Cluster
 from repro.sim.events import EventCluster
 from repro.sim.instances import Decoder, ModelCost, SimRequest
-from repro.sim.runner import run_policy
+from repro.sim.runner import build_fleet, run_policy
 from repro.sim.traces import TraceRequest
 
 
@@ -214,3 +231,134 @@ def test_booting_instances_are_billed(cfg, inst, prof):
     assert cl._gpu_count(0.0) == 3 * inst.gpus         # booting is billed
     pool.pop()
     assert cl._gpu_count(0.0) == 2 * inst.gpus         # removed is not
+
+
+# ---------------------------------------------------------------------------
+# 6. burst-ratio vectorization + baseline self-exclusion
+# ---------------------------------------------------------------------------
+
+def _burst_ratio_reference(arrivals, window_s=60.0, factor=1.0):
+    """Straight-from-the-docstring brute force: per-second token sums, the
+    baseline for second i = mean of seconds [i-window, i) — exclusive."""
+    arrivals = sorted(arrivals, key=lambda a: a[0])
+    if not arrivals:
+        return 0.0
+    t_end = max(a[0] for a in arrivals) + 1e-9
+    n = int(t_end) + 1
+    per_sec = [0.0] * n
+    for t, tok in arrivals:
+        per_sec[min(int(t), n - 1)] += tok
+    burst = 0.0
+    for i in range(n):
+        lo = max(0, i - int(window_s))
+        if i - lo == 0:
+            continue                     # no history -> never burst
+        avg = sum(per_sec[lo:i]) / (i - lo)
+        burst += max(per_sec[i] - factor * avg, 0.0)
+    return burst / max(sum(tok for _, tok in arrivals), 1e-9)
+
+
+@pytest.mark.parametrize("window_s,factor", [(60.0, 1.0), (10.0, 1.5),
+                                             (5.0, 0.8)])
+def test_burst_ratio_matches_brute_force(window_s, factor):
+    """Synthetic spike trace: a steady trickle with two 10x spike seconds
+    plus a randomized tail, through every (window, factor) shape."""
+    rng = np.random.RandomState(7)
+    arrivals = [(float(s) + 0.5, 100.0) for s in range(120)]
+    arrivals += [(30.2, 1000.0), (30.7, 1000.0), (75.4, 2000.0)]
+    arrivals += [(float(rng.uniform(0, 120)), float(rng.randint(10, 500)))
+                 for _ in range(200)]
+    got = burst_ratio_of_trace(arrivals, window_s, factor)
+    want = _burst_ratio_reference(arrivals, window_s, factor)
+    assert got == pytest.approx(want, rel=1e-9)
+    assert got > 0
+
+
+def test_burst_ratio_excludes_self_from_baseline():
+    """One 10x spike over a window it would otherwise dominate: with the
+    spike polluting its own baseline (the historical inclusive window)
+    the measured burst fraction collapses; excluded, the spike counts
+    (almost) fully."""
+    arrivals = [(float(s) + 0.5, 100.0) for s in range(10)]
+    arrivals.append((9.6, 1000.0))       # second 9 jumps to 1100 tokens
+    ratio = burst_ratio_of_trace(arrivals, window_s=60.0, factor=1.0)
+    # baseline for second 9 is the 9 clean seconds (100 tok/s): burst
+    # tokens = 1100 - 100 = 1000 of 2000 total
+    assert ratio == pytest.approx(1000.0 / 2000.0)
+
+
+def test_burst_ratio_first_second_never_bursts():
+    assert burst_ratio_of_trace([(0.2, 5000.0)]) == 0.0
+    assert burst_ratio_of_trace([]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# 7. fluid snapshot cadence (integer tick counter, not int(t / dt))
+# ---------------------------------------------------------------------------
+
+def test_fluid_snapshot_cadence_is_exact():
+    """duration 30 + 30 s drain at dt=25 ms is 2401 ticks (the
+    accumulated clock lands at 59.999… < 60, so the loop takes one final
+    boundary tick); the 0.2 s cadence is exactly every 8th tick -> exactly
+    301 rows, uniformly spaced.  Deriving the tick index as
+    ``int(t / dt)`` on the float-accumulated clock stalls within the
+    first few ticks and yields rows spaced 1/7/8/9 ticks apart."""
+    rep = run_policy("tokenscale", "azure_conv", duration=30.0, rps=2.0,
+                     seed=0, engine="fluid")
+    assert len(rep.timeline) == 301
+    ts = [s["t"] for s in rep.timeline]
+    diffs = [b - a for a, b in zip(ts, ts[1:])]
+    assert max(diffs) - min(diffs) < 1e-9
+    assert diffs[0] == pytest.approx(0.2)
+
+
+# ---------------------------------------------------------------------------
+# 8. convertible pool sizing follows the experiment's instance cap
+# ---------------------------------------------------------------------------
+
+def test_default_plan_pool_size_scales_with_max_decoders(cfg, inst, prof):
+    import math
+    for cap in (8, 40, 64):
+        plan = default_convertible_plan(cfg, inst, prof, max_decoders=cap)
+        assert plan.pool_size == max(math.ceil(cap * 0.2), 1)
+    # the historical 8 stays the default for direct callers
+    assert default_convertible_plan(cfg, inst, prof).pool_size == \
+        default_convertible_plan(cfg, inst, prof, max_decoders=8).pool_size
+
+
+def test_build_fleet_plumbs_max_decoders():
+    import math
+    fs = single_pool_fleet("llama31_8b", "a100", 1, n_convertible=1)
+    conv_of = lambda fleet: fleet.role_pools("convertible")[0].conv_cfg
+    assert conv_of(build_fleet(fs)).pool_size == 2              # legacy 8
+    assert conv_of(build_fleet(fs, max_decoders=40)).pool_size \
+        == math.ceil(40 * 0.2)
+    # Eq. 5-6 restriction itself is cap-independent — only the §IV-C2
+    # sizing moves
+    assert conv_of(build_fleet(fs)).chunk_size \
+        == conv_of(build_fleet(fs, max_decoders=40)).chunk_size
+
+
+# ---------------------------------------------------------------------------
+# 9. predictor mispredicts: uniform over the two other output classes
+# ---------------------------------------------------------------------------
+
+def test_predictor_mispredicts_cover_both_other_classes():
+    """At accuracy 0 every prediction is wrong: for a true S-output
+    request both M and L must appear (the docstring used to promise
+    neighbor-only errors that were never implemented — the uniform error
+    model is the documented behavior now), in roughly equal shares, and
+    never the true class itself."""
+    p = OutputPredictor(accuracy=0.0, seed=0)
+    preds = [p.predict_bucket(100, 50) for _ in range(600)]  # true S-S
+    outs = [b.split("-")[1] for b in preds]
+    assert set(outs) == {"M", "L"}
+    assert all(b.split("-")[0] == "S" for b in preds)  # input class kept
+    assert 0.4 < outs.count("L") / len(outs) < 0.6     # uniform, not biased
+
+
+def test_predictor_accuracy_is_calibrated():
+    p = OutputPredictor(accuracy=0.85, seed=1)
+    for i in range(4000):
+        p.predict_bucket(100 + i % 900, 30 + i % 400)
+    assert p.measured_accuracy == pytest.approx(0.85, abs=0.02)
