@@ -611,6 +611,86 @@ def deflect():
             emit("deflect", f"{pre},deflected", rep.n_deflected)
 
 
+#: the pareto fleet: a two-model cluster on mixed chips.  llama31-8B runs
+#: a bursty route on an a100 primary pair plus — for the coordinated
+#: planner only — an elastic l40s decode pool (higher decode tokens/s/$
+#: than the a100 primary: scale-out placement lands on the cheaper chip).
+#: qwen25-32B is the steady background tenant on h100-TP2; both models'
+#: convertible pools share (a100, TP2) so burst prefill can spill across
+#: models.  The per-model baseline plans the identical initial hardware,
+#: minus the elastic pool it cannot express (one pool per role).
+PARETO_CFG = dict(duration=120.0, seed=2, max_instances=12,
+                  llama_rps=28.0, qwen_rps=2.0, qwen_trace="azure_conv")
+PARETO_TRACES = ["burstgpt1", "burstgpt2"]
+#: variant -> (policy name, elastic l40s decode pool present)
+PARETO_VARIANTS = {"permodel": ("tokenscale", False),
+                   "coord": ("tokenscale-coord", True)}
+
+
+def pareto_fleet_spec(variant: str, trace: str):
+    """The shared fleet recipe for one pareto bench cell."""
+    from repro.core import FleetSpec, PoolSpec, TraceRoute
+    _, elastic = PARETO_VARIANTS[variant]
+    pools = [
+        PoolSpec("pre-ll", "prefill", "llama31_8b", "a100", 1, init=1),
+        PoolSpec("dec-ll", "decode", "llama31_8b", "a100", 1, init=1),
+        PoolSpec("conv-ll", "convertible", "llama31_8b", "a100", 2, init=1),
+        PoolSpec("pre-qw", "prefill", "qwen25_32b", "h100", 2, init=1),
+        PoolSpec("dec-qw", "decode", "qwen25_32b", "h100", 2, init=1),
+        PoolSpec("conv-qw", "convertible", "qwen25_32b", "a100", 2, init=2),
+    ]
+    if elastic:
+        pools.insert(2, PoolSpec("dec-ll-l40s", "decode", "llama31_8b",
+                                 "l40s", 1, init=0, min=0, max=8))
+    routes = (TraceRoute("llama31_8b", trace, rps=PARETO_CFG["llama_rps"]),
+              TraceRoute("qwen25_32b", PARETO_CFG["qwen_trace"],
+                         rps=PARETO_CFG["qwen_rps"]))
+    return FleetSpec(tuple(pools), routes)
+
+
+def run_pareto_variant(variant: str, trace: str = "burstgpt2",
+                       duration: float = None, engine: str = "events",
+                       dt: float = None):
+    """One pareto bench cell (shared with the golden regenerator and the
+    smoke row, so the fixture and the bench can never drift apart).
+    ``dt`` overrides the fluid tick (the differential test halves it, as
+    in tests/test_sim_differential.py)."""
+    policy, _ = PARETO_VARIANTS[variant]
+    kw = {"dt": dt} if dt is not None else {}
+    spec = ExperimentSpec(
+        fleet=pareto_fleet_spec(variant, trace), policy=policy,
+        engine=engine, duration=duration or PARETO_CFG["duration"],
+        seed=PARETO_CFG["seed"], max_instances=PARETO_CFG["max_instances"],
+        **kw)
+    return run_spec(spec)
+
+
+def pareto():
+    """Cost-vs-attainment frontier on the mixed-chip two-model fleet, at
+    event fidelity: the per-model TokenScale baseline (one pool per role,
+    planned independently per model) against the coordinated cross-pool
+    planner (cost-ranked placement onto the elastic l40s pool, drain-based
+    scale-down, cross-model convertible spill).  The acceptance gradient:
+    on the burst traces the coordinated planner Pareto-dominates — SLO
+    attainment at least as high at strictly lower ``cost_dollars``
+    (pinned by tests/golden/pareto_coord.json)."""
+    for trace in PARETO_TRACES:
+        for variant in PARETO_VARIANTS:
+            rep = run_pareto_variant(variant, trace)
+            cs = rep.cost_summary()
+            pre = f"{trace},{variant}"
+            emit("pareto", f"{pre},requests", len(rep.requests))
+            emit("pareto", f"{pre},slo_pct", 100 * rep.slo_attainment())
+            emit("pareto", f"{pre},ttft_p99_ms",
+                 1e3 * rep.percentile("ttft", 99))
+            emit("pareto", f"{pre},cost_dollars", cs["cost_dollars"])
+            emit("pareto", f"{pre},cost_per_hour", cs["cost_per_hour"])
+            emit("pareto", f"{pre},avg_gpus", rep.avg_gpus())
+            for m in rep.models():
+                emit("pareto", f"{pre},{m},slo_pct",
+                     100 * rep.slo_attainment(model=m))
+
+
 def hetero():
     """Heterogeneous fleet (a100-TP2 prefill + h100-TP1 decode pools) and
     a two-model cluster, each through both engines via the same
@@ -685,6 +765,12 @@ def smoke():
     emit("smoke", "deflect,deflected", rep.n_deflected)
     emit("smoke", "deflect,ttft_p99_ms", 1e3 * rep.percentile("ttft", 99))
     emit("smoke", "deflect,tpot_p99_ms", 1e3 * rep.percentile("tpot", 99))
+    rep = run_pareto_variant("coord", duration=30.0)
+    cs = rep.cost_summary()
+    emit("smoke", "pareto,requests", len(rep.requests))
+    emit("smoke", "pareto,slo_pct", 100 * rep.slo_attainment())
+    emit("smoke", "pareto,cost_dollars", cs["cost_dollars"])
+    emit("smoke", "pareto,avg_gpus", rep.avg_gpus())
 
 
 def perfscale():
@@ -738,6 +824,7 @@ BENCHES = {
     "tails": tails,
     "kvtiers": kvtiers,
     "deflect": deflect,
+    "pareto": pareto,
     "hetero": hetero,
     "perfscale": perfscale,
     "smoke": smoke,

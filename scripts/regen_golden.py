@@ -148,6 +148,34 @@ def regen_deflect():
     return "deflect_burst.json", out
 
 
+def regen_pareto():
+    """Coordinated-planner golden on the mixed-chip two-model pareto fleet
+    (benchmarks.run.run_pareto_variant, so the fixture and the bench share
+    one recipe): per-variant summary + cost accounting through both
+    engines, pinning the acceptance gradient — the coordinated planner
+    matches or beats the per-model baseline's SLO attainment at strictly
+    lower cost_dollars."""
+    from benchmarks.run import (PARETO_CFG, PARETO_VARIANTS,
+                                run_pareto_variant)
+    duration = 40.0                       # reduced horizon for CI budget
+    trace = "burstgpt2"
+    out = {"trace": trace, "duration": duration,
+           "fleet": dict(PARETO_CFG),
+           "variants": {v: list(pv) for v, pv in PARETO_VARIANTS.items()},
+           "engines": {}}
+    out["fleet"]["duration"] = duration
+    for eng in ["fluid", "events"]:
+        rows = {}
+        for variant in PARETO_VARIANTS:
+            rep = run_pareto_variant(variant, trace, duration=duration,
+                                     engine=eng)
+            s = rep.summary()             # schema shared with the test
+            s["cost"] = rep.cost_summary()
+            rows[variant] = s
+        out["engines"][eng] = rows
+    return "pareto_coord.json", out
+
+
 def render(spec: dict) -> str:
     return json.dumps(spec, indent=2) + "\n"
 
@@ -163,7 +191,8 @@ def main(argv=None):
                        regen_priority_preemption(),
                        regen_hetero_fleet(),
                        regen_kvtiers(),
-                       regen_deflect()]:
+                       regen_deflect(),
+                       regen_pareto()]:
         path = os.path.join(HERE, name)
         text = render(spec)
         if args.check:

@@ -68,6 +68,20 @@ def default_convertible_plan(cfg: ModelConfig, inst: InstanceSpec,
         avg_ctx=1200.0, burst_ratio=0.2, max_decoders=max_decoders)
 
 
+def spill_compatible(donor, recipient) -> bool:
+    """Can idle boxes move between these two convertible pools?
+
+    §IV-C2 sizes each convertible pool offline; a cross-model *loan*
+    re-images a compatible box with the borrower's weights (paying the
+    chip's startup latency) instead of provisioning a fresh instance.
+    Compatibility is hardware identity — same chip and TP degree — so the
+    borrower's offline Eq. 5-6 restriction plan applies to the borrowed
+    box unchanged.  Duck-typed over ``chip``/``tp`` so both ``PoolSpec``
+    and runtime pools qualify."""
+    return (donor.chip == recipient.chip and donor.tp == recipient.tp
+            and donor is not recipient)
+
+
 def burst_ratio_of_trace(arrivals, window_s: float = 60.0,
                          factor: float = 1.0) -> float:
     """Fraction of tokens arriving above the running-average trendline

@@ -32,10 +32,15 @@ one-pool specs (``sim.runner.run_policy``).  See DESIGN.md §1b.
 from __future__ import annotations
 
 import json
+import math
 from dataclasses import asdict, dataclass, field
-from typing import Optional
+from typing import Callable, Optional
 
-from repro.core.autoscaler import Observation, Policy, ScaleDecision
+from repro.core.autoscaler import (Observation, Policy, ScaleDecision,
+                                   TokenScalePolicy, _DownHysteresis)
+from repro.core.convertible import spill_compatible
+from repro.core.velocity import (VelocityProfile, decode_tokens_per_dollar,
+                                 prefill_tokens_per_dollar)
 
 #: valid pool roles
 ROLES = ("prefill", "decode", "convertible")
@@ -55,6 +60,11 @@ class PoolSpec:
     tp: int = 1
     init: int = 1                  # initial (convertible: fixed) size
     min: int = 1                   # scale-down floor (non-convertible)
+    # scale-up ceiling for fleet-native planners (0 = uncapped).  Per-model
+    # adapted policies ignore it (they predate pool sets); the coordinated
+    # planner apportions demand across same-role pools up to this cap, so
+    # an elastic overflow pool is expressed as ``min=0, max=N``.
+    max: int = 0
     # ---- KV-cache tiering (sim.kvcache; decode/convertible roles) ----
     # block_size > 0 switches the pool's decoders from the legacy flat
     # byte counter to the paged two-tier allocator (tokens per block);
@@ -84,6 +94,13 @@ class PoolSpec:
             raise ValueError(
                 f"pool {self.name!r}: unknown role {self.role!r}; "
                 f"expected one of {ROLES}")
+        if self.max < 0:
+            raise ValueError(
+                f"pool {self.name!r}: max must be >= 0 (0 = uncapped)")
+        if self.max > 0 and self.max < max(self.min, self.init):
+            raise ValueError(
+                f"pool {self.name!r}: max={self.max} below min={self.min}/"
+                f"init={self.init}")
         if self.block_size < 0:
             raise ValueError(
                 f"pool {self.name!r}: block_size must be >= 0")
@@ -124,9 +141,12 @@ class FleetSpec:
     """A list of pools + per-model trace routing.
 
     Constraints (validated here, relied on by the engines): every model
-    has exactly one prefill and one decode pool and at most one
-    convertible pool; pool names are unique; every route names a model
-    that has pools.
+    has at least one prefill and one decode pool (possibly several of
+    each — same-role pool *sets*, planned jointly by fleet-native
+    policies) and at most one convertible pool; pool names are unique;
+    every route names a model that has pools.  The first-declared pool of
+    each role is the model's *primary* pool: per-model adapted policies
+    and legacy single-pool shims see exactly that one.
     """
     pools: tuple[PoolSpec, ...]
     routes: tuple[TraceRoute, ...] = ()
@@ -139,9 +159,9 @@ class FleetSpec:
             raise ValueError(f"duplicate pool names: {names}")
         for m in self.models():
             roles = [p.role for p in self.pools_of(m)]
-            if roles.count("prefill") != 1 or roles.count("decode") != 1:
+            if roles.count("prefill") < 1 or roles.count("decode") < 1:
                 raise ValueError(
-                    f"model {m!r} needs exactly one prefill and one decode "
+                    f"model {m!r} needs at least one prefill and one decode "
                     f"pool (got roles {roles})")
             if roles.count("convertible") > 1:
                 raise ValueError(
@@ -231,6 +251,10 @@ class ExperimentSpec:
             # exactly as they did before the knob existed
             if not p.get("prefill_chunking"):
                 p.pop("prefill_chunking", None)
+            # ...and for the pool-set scale-up cap (0 = uncapped = the
+            # pre-cap schema)
+            if not p.get("max"):
+                p.pop("max", None)
         return d
 
     def to_json(self, **kw) -> str:
@@ -281,6 +305,10 @@ class PoolSnapshot:
     # prefill tok/s this decode-side pool absorbs via chunked deflection
     # (0 with chunking off or no queued chunk work)
     deflected_rate: float = 0.0
+    # ready instances with no resident work (spill donors / drain-reapable)
+    idle: int = 0
+    # instances marked draining: finishing residents, billed, no new work
+    draining: int = 0
 
 
 @dataclass
@@ -290,6 +318,7 @@ class GatewayStats:
     token_rate_by_bucket: dict[str, float] = field(default_factory=dict)
     rps: float = 0.0
     queued: int = 0                # centrally queued requests (Alg.1 line 15)
+    burst: bool = False            # §IV-A detector state at observation time
 
 
 @dataclass
@@ -310,9 +339,23 @@ class FleetObservation:
 class FleetPlan:
     """Pool name -> target instance count.  Pools absent from ``targets``
     are left alone (convertible pools are fixed, §IV-C2).  ``live`` pools
-    skip startup latency on scale-up (BlitzScale's ideal live scaling)."""
+    skip startup latency on scale-up (BlitzScale's ideal live scaling).
+
+    Drain semantics (fleet-native planners only): pools named in
+    ``drain`` scale down by *draining* — victims stop taking new work,
+    finish their residents (billed the whole time), and are reaped only
+    once idle — instead of the legacy idle-only immediate eviction.
+    Plans that leave ``drain`` empty execute byte-identically to the
+    pre-drain control plane.
+
+    ``spills`` are cross-model convertible loans: ``(src, dst, n)`` moves
+    up to ``n`` idle instances from convertible pool ``src`` to ``dst``
+    (same chip/TP — ``core.convertible.spill_compatible``), paying the
+    destination chip's startup for the weight swap."""
     targets: dict[str, int] = field(default_factory=dict)
     live: set[str] = field(default_factory=set)
+    drain: set[str] = field(default_factory=set)
+    spills: list[tuple[str, str, int]] = field(default_factory=list)
 
 
 # ---------------------------------------------------------------------------
@@ -323,8 +366,15 @@ def flat_observation(model: str, obs: FleetObservation) -> Observation:
     """The legacy flat view of one model's pools — byte-identical to the
     pre-pool ``ClusterBase._observation`` when the fleet has a single
     model group."""
-    (pre,) = obs.pools_of(model, "prefill")
-    (dec,) = obs.pools_of(model, "decode")
+    pres = obs.pools_of(model, "prefill")
+    decs = obs.pools_of(model, "decode")
+    if len(pres) != 1 or len(decs) != 1:
+        raise ValueError(
+            f"model {model!r} has {len(pres)} prefill / {len(decs)} decode "
+            "pools; the flat per-model view needs exactly one of each — "
+            "multi-pool fleets need a fleet-native policy (e.g. "
+            "'tokenscale-coord')")
+    (pre,), (dec,) = pres, decs
     conv = obs.pools_of(model, "convertible")
     gw = obs.gateway.get(model, GatewayStats())
     return Observation(
@@ -381,3 +431,255 @@ class PerModelFleetPolicy(FleetPolicy):
             if dec.live:
                 plan.live |= {pre_pool.name, dec_pool.name}
         return plan
+
+
+class CoordinatedTokenScalePolicy(FleetPolicy):
+    """Fleet-native TokenScale: Eq. 2-4 generalized over same-role pool
+    *sets*, planned globally across models.
+
+    Apportionment (the pool-set generalization of Eq. 2-3): each model's
+    residual prefill token rate (Eq. 2's ``token_rate_in - deflected``)
+    and per-bucket decode rate vector (Eq. 3) are walked down that
+    model's same-role pools ranked by *cost-normalized velocity*
+    (tokens/s/$, ``core.velocity``) — the DistServe goodput-per-GPU axis.
+    Each pool absorbs demand at its own profiled velocity up to its
+    ``PoolSpec.max`` cap; only the last pool touched ceils, so the pool
+    set provisions no more than a single merged pool would.  The fixed
+    convertible pool absorbs decode demand first at its *current* size
+    (Eq. 4 net of borrowed/lent boxes), then floors and per-pool
+    down-hysteresis apply exactly as in the per-model policy.
+
+    Scale-down is drain-based (every planned pool is named in
+    ``FleetPlan.drain``): victims finish residents before leaving, so a
+    lower target never evicts KV state mid-decode.
+
+    Cross-model spill: when a model's gateway is in burst and its
+    convertible pool has no idle box, idle convertibles are borrowed from
+    non-bursting models' ``spill_compatible`` pools (same chip/TP — the
+    loan is a weight swap, paying startup).  Loans are inferred from pool
+    sizes relative to ``PoolSpec.init`` — no planner-side ledger — and
+    reverse automatically once the borrower's burst subsides and the
+    borrowed boxes idle."""
+
+    name = "tokenscale-coord"
+
+    def __init__(self, fleet: FleetSpec, profiles: dict[str, VelocityProfile],
+                 down_delay: float = 5.0, spill: bool = True,
+                 headroom: float = 0.9):
+        missing = [p.name for p in fleet.pools if p.name not in profiles]
+        if missing:
+            raise ValueError(f"no velocity profile for pools {missing}")
+        if not 0.0 < headroom <= 1.0:
+            raise ValueError(f"headroom must be in (0, 1], got {headroom}")
+        self.fleet = fleet
+        self.profiles = profiles
+        self.spill = spill
+        # utilization guard-band: demand is apportioned against
+        # headroom * velocity, so pools run below saturation.  The per-
+        # instance first-iteration time grows with resident batch, so a
+        # pool planned to 100% of its TPOT-capped batch serves marginal
+        # TTFTs late even when aggregate throughput keeps up.
+        self.headroom = headroom
+        self.hyst = _DownHysteresis(down_delay)
+        # per-model TokenScale instances: never asked to decide() — they
+        # exist so the engines' policy-conditional routing (burst traffic
+        # to Convertible Decoders for TokenScale only) sees this planner
+        # as TokenScale for every model it serves
+        self._model_pols: dict[str, Policy] = {}
+        for m in fleet.models():
+            by_role = {r: [p for p in fleet.pools_of(m) if p.role == r]
+                       for r in ROLES}
+            conv = by_role["convertible"]
+            self._model_pols[m] = TokenScalePolicy(
+                profiles[by_role["prefill"][0].name],
+                convertible=conv[0].init if conv else 0,
+                decode_profile=profiles[by_role["decode"][0].name],
+                down_delay=down_delay)
+
+    def model_policy(self, model: str) -> Optional[Policy]:
+        return self._model_pols.get(model)
+
+    # ---- pool-set apportionment (Eq. 2-3 over ranked pools) -----------
+    def _rank(self, pools: list[PoolSpec], dollar_velocity) -> list[PoolSpec]:
+        """Descending tokens/s/$; ``sorted`` is stable, so equal-cost pools
+        keep declaration order (the primary pool wins ties)."""
+        return sorted(pools,
+                      key=lambda p: -dollar_velocity(self.profiles[p.name]))
+
+    def _settle(self, plan: FleetPlan, obs: FleetObservation,
+                spec: PoolSpec, take: int, burst: bool = False):
+        snap = obs.pools[spec.name]
+        tgt = max(take, spec.min)
+        active = snap.count - snap.draining
+        if burst:
+            # §IV-A gate: while the model's burst detector is hot, never
+            # drain below the active size — the inter-sub-burst lull that
+            # momentarily shrinks the token rate is exactly when released
+            # capacity would have to be bought back at startup latency
+            tgt = max(tgt, active)
+        plan.targets[spec.name] = self.hyst.apply(spec.name, active, tgt,
+                                                  obs.t)
+
+    def _apportion_prefill(self, plan: FleetPlan, obs: FleetObservation,
+                           pools: list[PoolSpec], rate: float,
+                           burst: bool = False):
+        remaining = rate
+        for spec in self._rank(pools, prefill_tokens_per_dollar):
+            prof = self.profiles[spec.name]
+            v = max(min(prof.v_prefill, prof.v_network) * self.headroom,
+                    1e-9)                                        # Eq. 2
+            cap = spec.max if spec.max > 0 else float("inf")
+            frac = remaining / v
+            if frac > cap:
+                take = int(cap)
+                remaining -= cap * v
+            else:
+                take = min(math.ceil(frac), int(min(cap, 1 << 30)))
+                remaining = 0.0
+            self._settle(plan, obs, spec, take, burst)
+
+    def _decode_need(self, prof: VelocityProfile,
+                     rem: dict[str, float]) -> float:
+        return sum(r / max(prof.v_decode.get(b, 1e9) * self.headroom, 1e-9)
+                   for b, r in rem.items())                       # Eq. 3
+
+    def _apportion_decode(self, plan: FleetPlan, obs: FleetObservation,
+                          pools: list[PoolSpec], rem: dict[str, float],
+                          burst: bool = False):
+        for spec in self._rank(pools, decode_tokens_per_dollar):
+            prof = self.profiles[spec.name]
+            need = self._decode_need(prof, rem)
+            cap = spec.max if spec.max > 0 else float("inf")
+            if need > cap:
+                take = int(cap)
+                f = cap / need
+                for b in rem:
+                    rem[b] *= (1.0 - f)
+            else:
+                take = min(math.ceil(need), int(min(cap, 1 << 30)))
+                for b in rem:
+                    rem[b] = 0.0
+            self._settle(plan, obs, spec, take, burst)
+
+    # ---- cross-model convertible spill --------------------------------
+    def _plan_spills(self, plan: FleetPlan, obs: FleetObservation):
+        convs = {m: next((p for p in self.fleet.pools_of(m)
+                          if p.role == "convertible"), None)
+                 for m in self.fleet.models()}
+        lent: dict[str, int] = {}      # boxes committed within this plan
+        for m, cp in convs.items():
+            if cp is None:
+                continue
+            snap = obs.pools.get(cp.name)
+            if snap is None:
+                continue
+            gw = obs.gateway.get(m, GatewayStats())
+            if gw.burst and snap.idle == 0:
+                # saturated convertibles under a detected burst: borrow
+                for m2, dp in convs.items():
+                    if m2 == m or dp is None or not spill_compatible(dp, cp):
+                        continue
+                    if obs.gateway.get(m2, GatewayStats()).burst:
+                        continue
+                    ds = obs.pools.get(dp.name)
+                    if ds is None:
+                        continue
+                    out = lent.get(dp.name, 0)
+                    # lend idle boxes only, never the donor's last one
+                    n = min(ds.idle - out, ds.count - out - 1)
+                    if n <= 0:
+                        continue
+                    plan.spills.append((dp.name, cp.name, n))
+                    lent[dp.name] = out + n
+            elif not gw.burst and snap.count > cp.init and snap.idle > 0:
+                # burst over: return borrowed boxes to shrunken donors
+                idle = snap.idle
+                for m2, dp in convs.items():
+                    if idle <= 0:
+                        break
+                    if m2 == m or dp is None or not spill_compatible(cp, dp):
+                        continue
+                    ds = obs.pools.get(dp.name)
+                    if ds is None or ds.count >= dp.init:
+                        continue
+                    n = min(idle, snap.count - cp.init, dp.init - ds.count)
+                    if n <= 0:
+                        continue
+                    plan.spills.append((cp.name, dp.name, n))
+                    idle -= n
+
+    # ---- the plan -----------------------------------------------------
+    def plan(self, obs: FleetObservation) -> FleetPlan:
+        plan = FleetPlan()
+        for m in self.fleet.models():
+            by_role = {r: [p for p in self.fleet.pools_of(m) if p.role == r]
+                       for r in ROLES}
+            gw = obs.gateway.get(m, GatewayStats())
+            # Eq. 2 residual: chunk-deflected work is owed by the decode
+            # side, never double-provisioned (summed across the pool set)
+            deflected = sum(
+                obs.pools[p.name].deflected_rate
+                for p in by_role["decode"] + by_role["convertible"]
+                if p.name in obs.pools)
+            rate = max(gw.token_rate_in - deflected, 0.0)
+            self._apportion_prefill(plan, obs, by_role["prefill"], rate,
+                                    gw.burst)
+            # Eq. 4 first: the convertible pool absorbs decode demand at
+            # its *current* size (loans included) before regular pools
+            rem = dict(gw.token_rate_by_bucket)
+            conv = by_role["convertible"]
+            if conv and rem:
+                snap = obs.pools.get(conv[0].name)
+                n_conv = snap.count if snap is not None else conv[0].init
+                cprof = self.profiles[conv[0].name]
+                need = self._decode_need(cprof, rem)
+                if need > 0.0:
+                    f = min(n_conv / need, 1.0)
+                    for b in rem:
+                        rem[b] *= (1.0 - f)
+            self._apportion_decode(plan, obs, by_role["decode"], rem,
+                                   gw.burst)
+        # drain-based scale-down for every pool this planner owns
+        plan.drain = set(plan.targets)
+        if self.spill:
+            self._plan_spills(plan, obs)
+        return plan
+
+
+# ---------------------------------------------------------------------------
+# Fleet-policy registry: string-keyed construction of fleet-native planners
+# ---------------------------------------------------------------------------
+
+#: name -> factory(fleet_spec, {pool name -> VelocityProfile}, **options)
+FLEET_POLICY_REGISTRY: dict[str, Callable[..., FleetPolicy]] = {}
+
+
+def register_fleet_policy(name: str):
+    """Register a fleet-native policy factory.  Unlike ``@register_policy``
+    (per-model, adapted through ``PerModelFleetPolicy``), these factories
+    see the whole ``FleetSpec`` and one profile per pool, and plan all
+    pools jointly.  ``sim.runner.run_spec`` checks this registry first, so
+    an ``ExperimentSpec.policy`` string resolves to a fleet-native planner
+    when one exists under that name."""
+    def deco(factory):
+        FLEET_POLICY_REGISTRY[name] = factory
+        factory.policy_name = name
+        return factory
+    return deco
+
+
+def build_fleet_policy(name: str, fleet: FleetSpec,
+                       profiles: dict[str, VelocityProfile],
+                       **options) -> FleetPolicy:
+    try:
+        factory = FLEET_POLICY_REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown fleet policy {name!r}; registered: "
+            f"{sorted(FLEET_POLICY_REGISTRY)}")
+    return factory(fleet, profiles, **options)
+
+
+@register_fleet_policy("tokenscale-coord")
+def _build_tokenscale_coord(fleet, profiles, **kw):
+    return CoordinatedTokenScalePolicy(fleet, profiles, **kw)

@@ -51,6 +51,13 @@ CHIPS: dict[str, ChipSpec] = {
     "v5e": ChipSpec("v5e", 197e12, 8.19e11, 16e9, 50e9,
                     mfu=0.55, mbu=0.70, startup_s=4.0, cost_per_hour=1.2,
                     host_dram_cap=48e9, swap_bw=12e9),
+    # L40S-48G (Ada): dense-BF16 compute near A100 but GDDR6 bandwidth
+    # (864 GB/s) and PCIe-only interconnect — low absolute decode velocity,
+    # yet the best decode tokens/s/$ of the menu at ~1.8 $/hr.  The chip
+    # the cost-aware planner should prefer for decode when SLOs allow.
+    "l40s": ChipSpec("l40s", 181e12, 8.64e11, 48e9, 25e9,
+                     mfu=0.60, mbu=0.70, startup_s=5.0, cost_per_hour=1.8,
+                     host_dram_cap=64e9, swap_bw=20e9),
 }
 
 V5E = CHIPS["v5e"]

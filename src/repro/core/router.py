@@ -124,6 +124,18 @@ class BurstDetector:
         return short > self.factor * max(long, 1e-9)
 
 
+def _decode_capacity(d, bucket: str) -> float:
+    """SLO-feasible batch for ``bucket`` on this decoder's chip, from its
+    pool's velocity profile (``VelocityProfile.max_batch``).  Bare
+    decoders (unit tests, no pool backref) report 1.0 — with every
+    candidate equal the capacity never matters."""
+    prof = getattr(getattr(d, "pool", None), "prof", None)
+    if prof is None:
+        return 1.0
+    mb = prof.max_batch
+    return float(mb.get(bucket) or max(mb.values(), default=1) or 1)
+
+
 def _by_velocity(targets: list) -> list:
     """Candidates in descending prefill-velocity order.  ``sorted`` is
     stable, so a homogeneous pool (all velocities equal) keeps its
@@ -198,10 +210,19 @@ class Router:
     def route_decode(self, bucket: str, decoders: list,
                      mem_threshold: float = 0.9):
         """Fewest in-flight requests of `bucket`; convertibles excluded
-        above the memory threshold.  Candidates may span heterogeneous
-        decode pools — per-instance ``mem_util`` already normalizes by
-        each chip's own HBM capacity, so the (inflight, util) key needs
-        no extra velocity weighting."""
+        above the memory threshold.
+
+        Candidates spanning heterogeneous decode pools (same-role pool
+        sets on mixed chips) are balanced by *share of capacity* —
+        in-flight count over the pool profile's SLO-feasible batch for
+        the bucket — so a small-batch chip (l40s) is not loaded to the
+        same absolute residency as an h100.  The capacity divide is
+        applied only when the candidates' capacities actually differ:
+        with all capacities equal it is a constant positive rescaling of
+        the integer count (order-preserving, no float collapse at sim
+        batch sizes), so homogeneous fleets keep the historical key
+        byte-for-byte — the same guarded-specialization idiom as
+        ``_by_velocity``."""
         candidates = [d for d in decoders
                       if not (getattr(d, "is_convertible", False)
                               and d.mem_util() > mem_threshold)]
@@ -209,6 +230,12 @@ class Router:
             candidates = decoders
         if not candidates:
             return None
+        caps = [_decode_capacity(d, bucket) for d in candidates]
+        if any(c != caps[0] for c in caps[1:]):
+            return min(zip(candidates, caps),
+                       key=lambda dc: (dc[0].inflight_of_bucket(bucket)
+                                       / max(dc[1], 1.0),
+                                       dc[0].mem_util()))[0]
         return min(candidates,
                    key=lambda d: (d.inflight_of_bucket(bucket),
                                   d.mem_util()))

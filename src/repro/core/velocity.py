@@ -235,6 +235,36 @@ def chunked_prefill_velocity(chunk_tokens: float, mixed_iter_t: float
     return chunk_tokens / mixed_iter_t
 
 
+# ---------------------------------------------------------------------------
+# Cost-normalized velocity (tokens per dollar) — the placement metric the
+# coordinated fleet planner ranks heterogeneous pools by: among pools that
+# can serve the same demand, the one releasing the most tokens per dollar
+# absorbs first (DistServe's goodput-per-GPU framing, priced per chip).
+# ---------------------------------------------------------------------------
+
+def instance_cost_rate(chip: str, tp: int) -> float:
+    """$/s of one (chip, tp) instance — ``ChipSpec.cost_per_hour`` times
+    the TP degree, the same weighting the billing integral applies."""
+    from repro.core.hardware import CHIPS
+    return CHIPS[chip].cost_per_hour * tp / 3600.0
+
+
+def prefill_tokens_per_dollar(prof: VelocityProfile) -> float:
+    """Cost-normalized effective prefill velocity (tokens per dollar):
+    Eq. 2's min(V_P, V_N) divided by the instance's $/s rate."""
+    rate = instance_cost_rate(prof.chip, prof.tp)
+    return min(prof.v_prefill, prof.v_network) / max(rate, 1e-12)
+
+
+def decode_tokens_per_dollar(prof: VelocityProfile,
+                             bucket: str = None) -> float:
+    """Cost-normalized decode velocity (tokens per dollar), per bucket or
+    averaged across Table II's buckets when ``bucket`` is None."""
+    rate = instance_cost_rate(prof.chip, prof.tp)
+    v = prof.v_decode[bucket] if bucket else prof.v_decode_mean()
+    return v / max(rate, 1e-12)
+
+
 def deflected_prefill_rate(decoders, window_s: float = 1.0) -> float:
     """Aggregate prefill-token rate (tok/s) the decode side is absorbing
     through chunked deflection right now: for each decoder with queued

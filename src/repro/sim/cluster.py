@@ -64,7 +64,7 @@ class Cluster(ClusterBase):
             for pool in self.fleet.role_pools("prefill"):
                 for p in pool.instances:
                     for req in p.tick(t, self.dt):
-                        self._to_network(req, t)
+                        self._to_network(req, t, pool)
             for role in ("decode", "convertible"):
                 for pool in self.fleet.role_pools(role):
                     for d in pool.instances:

@@ -189,7 +189,7 @@ class EventCluster(ClusterBase):
         if p.queue and p.queue[0][0] is req:
             p.queue.pop(0)
             p._inflight_cache = None
-        kv_ready_t, _ = self._to_network(req, t)   # sets t_prefill_end
+        kv_ready_t, _ = self._to_network(req, t, p.pool)  # sets t_prefill_end
         self._push(kv_ready_t, "kv_ready")
         self._drain_wait_queue(t)          # prefill capacity freed (§IV-E)
         self._kick_prefiller(p, t)

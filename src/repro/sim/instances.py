@@ -81,6 +81,11 @@ class SimRequest:
     kv_hit_tokens: int = 0     # prompt tokens reused from a cached prefix
     kv_prefix: Optional[tuple] = None   # (owner decoder, tokens, tier) pin
     kv_swap: Optional[object] = None    # allocator holding our DRAM ticket
+    # Alg. 1 round 2b: the decoder this prompt was deflected to.  Its KV
+    # is produced on that box, so admission stays there (deflection
+    # affinity in ``_admit_pending``) instead of re-entering bucket-aware
+    # load balancing; cleared if the target leaves the fleet.
+    deflect_tgt: Optional[object] = None
     # ---- hot-path caches (immutable trace facts, resolved once: the
     # preemption scans touch .priority millions of times per run) ----
     priority: int = field(init=False, repr=False, compare=False, default=1)
@@ -784,40 +789,72 @@ class Pool:
 
 
 class ModelGroup:
-    """One model's pools (exactly one prefill + one decode, at most one
-    convertible) plus its own router/burst-detector: burst detection and
-    Alg. 1 routing are per model, so one tenant's spike never routes
-    another tenant's traffic to the wrong Convertible Decoders."""
+    """One model's pools (at least one prefill + one decode — same-role
+    pool *sets* — and at most one convertible) plus its own router/burst-
+    detector: burst detection and Alg. 1 routing are per model, so one
+    tenant's spike never routes another tenant's traffic to the wrong
+    Convertible Decoders.
 
-    def __init__(self, model: str, prefill: Pool, decode: Pool,
-                 convertible: Optional[Pool]):
+    The first-declared pool of each role is the model's *primary* pool
+    (``self.prefill`` / ``self.decode``): per-model policy plumbing and
+    the legacy single-pool aliases see exactly that one, so single-pool
+    fleets behave byte-identically.  Routing and admission candidates
+    span the full sets."""
+
+    def __init__(self, model: str, prefill_pools: list[Pool],
+                 decode_pools: list[Pool], convertible: Optional[Pool]):
         self.model = model
-        self.prefill = prefill
-        self.decode = decode
+        self.prefill_pools = list(prefill_pools)
+        self.decode_pools = list(decode_pools)
+        self.prefill = self.prefill_pools[0]
+        self.decode = self.decode_pools[0]
         self.convertible = convertible
         self.router = Router(BurstDetector())
-        # deflection (Alg. 1 round 2b) is enabled per model by the decode
+        # deflection (Alg. 1 round 2b) is enabled per model by a decode
         # pool's chunking knob; convertible pools with chunking keep their
         # round-2 slot but execute chunk-interleaved instead of wholesale
-        self.deflect_on = decode.spec.prefill_chunking > 0
+        self.deflect_on = any(p.spec.prefill_chunking > 0
+                              for p in self.decode_pools)
         # decode_instances() is probed per (pending request, pass) on the
         # admission path; pool membership only changes inside
-        # ClusterBase._scale, which drops this cache
+        # ClusterBase._scale, which drops these caches
         self._decode_cache: Optional[list] = None
+        self._prefill_cache: Optional[list] = None
 
     def conv_instances(self) -> list:
         return self.convertible.instances if self.convertible else []
 
+    def prefill_instances(self) -> list:
+        """All prefill-role instances across the pool set.  Single-pool
+        groups return the pool's own (live) list — the historical
+        aliasing — multi-pool groups a cached flattening."""
+        if len(self.prefill_pools) == 1:
+            return self.prefill.instances
+        v = self._prefill_cache
+        if v is None:
+            v = self._prefill_cache = [i for p in self.prefill_pools
+                                       for i in p.instances]
+        return v
+
     def deflect_instances(self) -> list:
-        """Round-2b candidates: the regular decode pool's instances (the
-        convertibles are already round-2 targets)."""
-        return self.decode.instances if self.deflect_on else []
+        """Round-2b candidates: instances of decode pools with chunking on
+        (the convertibles are already round-2 targets)."""
+        if not self.deflect_on:
+            return []
+        if len(self.decode_pools) == 1:
+            return self.decode.instances
+        return [i for p in self.decode_pools
+                if p.spec.prefill_chunking > 0 for i in p.instances]
 
     def decode_instances(self) -> list:
         v = self._decode_cache
         if v is None:
-            v = self._decode_cache = self.decode.instances \
-                + self.conv_instances()
+            if len(self.decode_pools) == 1:
+                v = self.decode.instances + self.conv_instances()
+            else:
+                v = [i for p in self.decode_pools for i in p.instances] \
+                    + self.conv_instances()
+            self._decode_cache = v
         return v
 
 
@@ -843,12 +880,12 @@ class Fleet:
             pre = [p for p in mine if p.spec.role == "prefill"]
             dec = [p for p in mine if p.spec.role == "decode"]
             conv = [p for p in mine if p.spec.role == "convertible"]
-            if len(pre) != 1 or len(dec) != 1 or len(conv) > 1:
+            if not pre or not dec or len(conv) > 1:
                 raise ValueError(
-                    f"model {m!r}: need exactly one prefill and one decode "
+                    f"model {m!r}: need at least one prefill and one decode "
                     f"pool and at most one convertible pool, got "
                     f"{[p.spec.name for p in mine]}")
-            self.groups[m] = ModelGroup(m, pre[0], dec[0],
+            self.groups[m] = ModelGroup(m, pre, dec,
                                         conv[0] if conv else None)
         self.default_model = models[0]
 
@@ -878,6 +915,11 @@ class SimReport:
     # prompts the router deflected to regular decoders (Alg. 1 round 2b;
     # 0 with chunking off)
     n_deflected: int = 0
+    # dollar-weighted billing integral (ChipSpec.cost_per_hour x TP per
+    # provisioned instance-second — the weighted analog of gpu_seconds)
+    # and its per-pool breakdown; the --bench=pareto cost axis
+    cost_dollars: float = 0.0
+    pool_cost: dict = field(default_factory=dict)
 
     # ---- SLO metrics (§V) ----
     # Every metric optionally restricts to one priority class and/or one
@@ -958,6 +1000,18 @@ class SimReport:
 
     def avg_gpus(self) -> float:
         return self.gpu_seconds / max(self.duration, 1e-9)
+
+    def cost_summary(self) -> dict:
+        """Dollar-billing view (the weighted analog of ``avg_gpus``): the
+        exact piecewise-constant cost integral, its hourly rate, and the
+        per-pool breakdown — the DistServe goodput-per-dollar axis that
+        ``--bench=pareto`` plots against SLO attainment."""
+        return {
+            "cost_dollars": self.cost_dollars,
+            "cost_per_hour": self.cost_dollars
+            / max(self.duration, 1e-9) * 3600.0,
+            "pool_cost": dict(self.pool_cost),
+        }
 
     def throughput(self, model: Optional[str] = None) -> float:
         """Finished requests per second over the horizon."""
@@ -1126,6 +1180,13 @@ class ClusterBase:
         self.wait_queue: list[SimRequest] = []
         self.finished: list[SimRequest] = []
         self.gpu_seconds = 0.0
+        # dollar-weighted billing: a segment-based integral advanced at
+        # every fleet-membership change (see _cost_advance) — exact with
+        # zero per-tick/per-event cost, unlike gpu_seconds' cached-rate
+        # accumulation in the engines' run loops
+        self.cost_dollars = 0.0
+        self.pool_cost = {name: 0.0 for name in self.pools}
+        self._cost_t0 = 0.0
         self.n_deflected = 0     # prompts routed to decoders (round 2b)
         self.timeline: list[dict] = []
         # rolling 1-s gateway counters (deque: the 5 s window expires from
@@ -1250,6 +1311,7 @@ class ClusterBase:
         else:
             if kind == "deflect":
                 self.n_deflected += 1
+                req.deflect_tgt = tgt
             tgt.submit_prefill(req, t)
 
     def _on_arrival(self, req: SimRequest, t: float):
@@ -1276,7 +1338,7 @@ class ClusterBase:
                 self._submit_prefill_work(tgt, "convertible", req, t)
                 return
         tgt, kind = g.router.route_prefill(
-            req.src.in_len, self._ready(g.prefill.instances, t),
+            req.src.in_len, self._ready(g.prefill_instances(), t),
             self._ready(convs, t) if is_ts else [], t,
             priority=req.priority,
             deflectables=self._ready(g.deflect_instances(), t))
@@ -1330,7 +1392,7 @@ class ClusterBase:
                 is_ts = isinstance(self.policy.model_policy(m),
                                    TokenScalePolicy)
                 cached = ready_cache[m] = (
-                    self._ready(g.prefill.instances, t),
+                    self._ready(g.prefill_instances(), t),
                     self._ready(g.conv_instances(), t) if is_ts else [],
                     self._ready(g.deflect_instances(), t))
             pres, convs, defl = cached
@@ -1386,12 +1448,18 @@ class ClusterBase:
         st.hits += 1
         st.hit_tokens += usable
 
-    def _to_network(self, req: SimRequest, t: float) -> tuple[float, SimRequest]:
+    def _to_network(self, req: SimRequest, t: float,
+                    pool: Optional[Pool] = None) -> tuple[float, SimRequest]:
         req.t_prefill_end = t
-        g = self._group_of(req)
+        # the KVC leaves over the *completing* prefiller's interconnect —
+        # engines pass its pool, so heterogeneous prefill pool sets charge
+        # each chip's own network (single-pool fleets: identical to the
+        # model's primary pool)
+        if pool is None:
+            pool = self._group_of(req).prefill
         # a prefix-cache hit only ships the uncached suffix (the shared
         # blocks already live on the decode side)
-        delay = hw.kvc_transfer_time(g.prefill.cfg, g.prefill.inst,
+        delay = hw.kvc_transfer_time(pool.cfg, pool.inst,
                                      req.src.in_len - req.kv_hit_tokens)
         entry = (t + delay, req)
         self._pending_add(entry)
@@ -1458,7 +1526,26 @@ class ClusterBase:
                 else:
                     self._kv_prefix_penalty(req, t)
                     continue
+            elif req.deflect_tgt is not None and req.deflect_tgt.live \
+                    and not req.deflect_tgt.draining:
+                # deflection affinity (Alg. 1 round 2b follow-through):
+                # the prompt's KV was produced on-box, so it decodes on
+                # its deflection target — rerouting through bucket-aware
+                # load balancing would ship the KV to another decoder
+                # without charging any transfer.  Only the paged-KV spill
+                # path reaches here (non-paged deflections admit
+                # unconditionally in advance_prefill); if the target
+                # can't admit yet the request waits for *it*, not for
+                # the pool
+                tgt = req.deflect_tgt
+                if tgt.ready(t) and tgt.can_admit(req):
+                    d = tgt
+                else:
+                    rest.append((ready_t, req))
+                    continue
             else:
+                # target torn down or draining: rejoin the shared path
+                req.deflect_tgt = None
                 if fast:
                     c = g.decode.cost
                     need = (req.src.in_len + req.src.out_len) * c.kv_tok \
@@ -1629,7 +1716,7 @@ class ClusterBase:
             # byte-counter path below keeps the optimistic constant, which
             # the priority_preemption golden pins.)
             backlogs = [p.inflight_tokens() / max(p.prefill_velocity(), 1e-9)
-                        for p in self._ready(g.prefill.instances, t)]
+                        for p in self._ready(g.prefill_instances(), t)]
             recompute += min(backlogs) if backlogs else 0.0
             if self.preemption.mode == "pause-requeue":
                 kind, nbytes = d.kv.swap_out(victim.src.rid)
@@ -1669,6 +1756,8 @@ class ClusterBase:
             ready = [i for i in insts if i.ready(t)]
             snap = PoolSnapshot(name, pool.spec.role, pool.spec.model,
                                 count=len(insts), ready=len(ready))
+            snap.idle = sum(1 for i in ready if i.idle and not i.draining)
+            snap.draining = sum(1 for i in insts if i.draining)
             if pool.spec.role == "prefill":
                 snap.queue_requests = sum(len(p.queue) for p in insts)
                 snap.inflight_tokens = sum(p.inflight_tokens()
@@ -1696,10 +1785,15 @@ class ClusterBase:
             queued = sum(
                 1 for r in self.wait_queue
                 if (r.model or self.fleet.default_model) == model)
+            g = self.fleet.groups[model]
             gateway[model] = GatewayStats(
                 token_rate_in=sum(r.src.in_len for r in mwin) / 1.0,
                 token_rate_by_bucket=by_bucket, rps=len(mwin) / 1.0,
-                queued=queued)
+                queued=queued,
+                # is_burst is idempotent for monotone t (the windows only
+                # trim), so observing it here never perturbs the per-
+                # arrival detector state the routing path reads
+                burst=bool(g.router.burst.is_burst(t)))
         return FleetObservation(t=t, pools=snaps, gateway=gateway)
 
     def _observation(self, t: float) -> Observation:
@@ -1709,17 +1803,28 @@ class ClusterBase:
 
     def _scale(self, t: float):
         """Execute the policy's ``FleetPlan`` pool by pool, in declaration
-        order.  Convertible pools are fixed (§IV-C2) and pools the plan
-        does not target are left alone; scale-down only ever removes idle
-        instances and respects the pool's ``min`` floor."""
+        order.  Convertible pools are fixed (§IV-C2) outside explicit
+        ``plan.spills`` and pools the plan does not target are left alone.
+
+        Scale-down: pools named in ``plan.drain`` drain — victims are
+        marked ``draining`` (no new work, residents finish, billed until
+        removal) and reaped once idle — while legacy plans keep the
+        historical idle-only immediate eviction byte-for-byte.  Both
+        respect the pool's ``min`` floor."""
         obs = self._fleet_observation(t)
         plan = self.policy.plan(obs)
+        # fleet membership changes only below: settle the cost integral
+        # over the closing constant segment first
+        self._cost_advance(t)
         for name, pool in self.pools.items():
             if pool.spec.role == "convertible" or name not in plan.targets:
                 continue
             startup = 0.0 if name in plan.live \
                 else pool.inst.chip.startup_s
             want = min(plan.targets[name], self.max_instances)
+            if name in plan.drain:
+                self._scale_drain(pool, want, t, startup)
+                continue
             while len(pool.instances) < want:
                 pool.instances.append(self._spawn(pool, t + startup))
             while len(pool.instances) > max(want, pool.spec.min):
@@ -1728,9 +1833,79 @@ class ClusterBase:
                     break
                 idle[-1].live = False
                 pool.instances.remove(idle[-1])
+        for src, dst, n in plan.spills:
+            self._execute_spill(src, dst, n, t)
         for g in self.fleet.groups.values():
             g._decode_cache = None
+            g._prefill_cache = None
         self._after_scale(t)
+
+    def _scale_drain(self, pool: Pool, want: int, t: float, startup: float):
+        """Drain-based resize: reap drained-and-idle victims, then close
+        the gap to ``want`` counting only *active* (non-draining)
+        instances — scale-up cancels drains first (instant capacity, the
+        box never left), scale-down marks the idlest actives draining."""
+        for i in [x for x in pool.instances if x.draining and x.idle]:
+            i.live = False
+            pool.instances.remove(i)
+        active = [i for i in pool.instances if not i.draining]
+        want = max(want, pool.spec.min)
+        if len(active) < want:
+            for i in pool.instances:
+                if i.draining:
+                    i.draining = False
+                    active.append(i)
+                    if len(active) >= want:
+                        break
+            while len(active) < want:
+                i = self._spawn(pool, t + startup)
+                pool.instances.append(i)
+                active.append(i)
+        elif len(active) > want:
+            # idle victims first (they reap on the next pass); busy ones
+            # keep iterating — and billing — until their residents finish
+            excess = len(active) - want
+            victims = [i for i in reversed(active) if i.idle][:excess]
+            if len(victims) < excess:
+                busy = [i for i in reversed(active) if not i.idle]
+                victims += busy[:excess - len(victims)]
+            for i in victims:
+                i.draining = True
+
+    def _execute_spill(self, src: str, dst: str, n: int, t: float):
+        """Move up to ``n`` idle instances from convertible pool ``src``
+        to ``dst`` (cross-model loan/return): the box is re-imaged with
+        the destination model's weights, so it leaves immediately and
+        joins the destination pool after its chip's startup latency."""
+        sp, dp = self.pools.get(src), self.pools.get(dst)
+        if sp is None or dp is None or n <= 0:
+            return
+        movable = [i for i in sp.instances
+                   if i.ready(t) and i.idle and not i.draining]
+        for i in movable[:n]:
+            i.live = False
+            sp.instances.remove(i)
+            dp.instances.append(self._spawn(dp, t + dp.inst.chip.startup_s))
+
+    def _cost_advance(self, t: float):
+        """Advance the dollar-billing integral to ``t``.  Exact because
+        fleet membership only changes inside ``_scale`` (which settles
+        the closing segment before touching any pool) and ``_report``
+        (the final segment): between those points the per-pool cost rate
+        is constant, so one multiply per pool per scale interval replaces
+        any per-tick/per-event accumulation."""
+        dt = t - self._cost_t0
+        if dt > 0.0:
+            pc = self.pool_cost
+            total = 0.0
+            for name, pool in self.pools.items():
+                rate = sum(i.spec.cost_rate for i in pool.instances)
+                if rate > 0.0:
+                    c = rate * dt
+                    pc[name] += c
+                    total += c
+            self.cost_dollars += total
+        self._cost_t0 = t
 
     def _after_scale(self, t: float):
         """Engine hook: schedule wake-ups for newly provisioned instances."""
@@ -1783,6 +1958,7 @@ class ClusterBase:
         }
 
     def _report(self, t_end: float) -> SimReport:
+        self._cost_advance(t_end)      # settle the final billing segment
         return SimReport(self.policy.name,
                          self.finished + self._unfinished(),
                          self.gpu_seconds, t_end, self.timeline,
@@ -1790,7 +1966,9 @@ class ClusterBase:
                          preemptions=list(self.preemption_log),
                          kv=self.kv_stats.summary() if self._kv_on else {},
                          n_events=getattr(self, "n_events", 0),
-                         n_deflected=self.n_deflected)
+                         n_deflected=self.n_deflected,
+                         cost_dollars=self.cost_dollars,
+                         pool_cost=dict(self.pool_cost))
 
 
 def _pred_out(req: SimRequest) -> int:

@@ -22,7 +22,8 @@ from repro.core import (CHIPS, ExperimentSpec, InstanceSpec, OutputPredictor,
                         PerModelFleetPolicy, build_policy,
                         default_convertible_plan, profile_for,
                         single_pool_fleet)
-from repro.core.fleet import FleetSpec, PoolSpec, TraceRoute
+from repro.core.fleet import (FLEET_POLICY_REGISTRY, FleetSpec, PoolSpec,
+                              TraceRoute, build_fleet_policy)
 from repro.core.velocity import VelocityProfile
 from repro.sim.cluster import Cluster, SimReport
 from repro.sim.events import EventCluster
@@ -107,18 +108,29 @@ def run_spec(spec: ExperimentSpec,
     fleet = build_fleet(spec.fleet, profiles,
                         max_decoders=spec.max_instances)
     trace = build_traces(spec)
-    policies = {}
-    for model, g in fleet.groups.items():
-        stats = trace_stats(
-            [r for r in trace
-             if (r.model or fleet.default_model) == model])
-        policies[model] = build_policy(
-            spec.policy, g.prefill.prof, decode_prof=g.decode.prof,
-            mean_in=stats.mean_in, mean_out=stats.mean_out,
-            n_convertible=g.convertible.spec.init if g.convertible else 0,
+    if spec.policy in FLEET_POLICY_REGISTRY:
+        # fleet-native planner: sees the whole spec + one profile per
+        # pool, plans all pools jointly (same-role pool sets, cross-model
+        # spill, drain-based scale-down)
+        fpolicy = build_fleet_policy(
+            spec.policy, spec.fleet,
+            {name: pool.prof for name, pool in fleet.pools.items()},
             **spec.policy_options)
+    else:
+        policies = {}
+        for model, g in fleet.groups.items():
+            stats = trace_stats(
+                [r for r in trace
+                 if (r.model or fleet.default_model) == model])
+            policies[model] = build_policy(
+                spec.policy, g.prefill.prof, decode_prof=g.decode.prof,
+                mean_in=stats.mean_in, mean_out=stats.mean_out,
+                n_convertible=g.convertible.spec.init if g.convertible
+                else 0,
+                **spec.policy_options)
+        fpolicy = PerModelFleetPolicy(policies)
     cl = get_engine(spec.engine)(
-        fleet, policy=PerModelFleetPolicy(policies),
+        fleet, policy=fpolicy,
         predictor=OutputPredictor(spec.predictor_accuracy, spec.seed),
         dt=spec.dt, preemption=spec.preemption,
         max_instances=spec.max_instances,

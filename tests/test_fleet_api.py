@@ -69,8 +69,12 @@ def test_fleet_spec_validation():
         PoolSpec("p", "prefiller")
     with pytest.raises(ValueError, match="duplicate pool names"):
         FleetSpec((PoolSpec("p", "prefill"), PoolSpec("p", "decode")))
-    with pytest.raises(ValueError, match="exactly one prefill"):
+    with pytest.raises(ValueError, match="at least one prefill"):
         FleetSpec((PoolSpec("p", "prefill"),))          # no decode pool
+    # same-role pool *sets* are legal (fleet-native planners apportion
+    # demand across them); only a missing role is an error
+    FleetSpec((PoolSpec("p", "prefill"), PoolSpec("d1", "decode"),
+               PoolSpec("d2", "decode", chip="l40s")))
     with pytest.raises(ValueError, match="unknown model"):
         FleetSpec((PoolSpec("p", "prefill"), PoolSpec("d", "decode")),
                   (TraceRoute("qwen25_32b"),))

@@ -1,0 +1,328 @@
+"""Coordinated cross-pool planner (tentpole PR 7).
+
+Covers the fleet-native TokenScale generalization and its satellites:
+
+  * golden replay of ``tests/golden/pareto_coord.json`` (both engines x
+    permodel/coord variants on the mixed-chip two-model fleet);
+  * the acceptance gradient — the coordinated planner Pareto-dominates
+    the per-model baseline at event fidelity: SLO attainment at least as
+    high at strictly lower ``cost_dollars``;
+  * fluid-vs-events differential band (<= 15%) for the coordinated
+    planner;
+  * plan properties on a synthetic observation grid: targets never
+    violate per-pool floors/caps, every planned pool drains on
+    scale-down, spills only move idle convertibles between
+    spill-compatible pools and never take the donor's last box;
+  * cost-ranked placement prefers the cheaper chip at equal velocity;
+  * drain-based scale-down never strands a resident request;
+  * chunk-deflected prompts decode on their deflection target (on-box
+    admission affinity), never re-entering bucket-aware balancing.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, REPO)          # the pareto fixture shares benchmarks.run
+
+from benchmarks.run import run_pareto_variant  # noqa: E402
+from repro.core.fleet import (CoordinatedTokenScalePolicy,  # noqa: E402
+                              FLEET_POLICY_REGISTRY, FleetObservation,
+                              FleetSpec, GatewayStats, PoolSnapshot,
+                              PoolSpec, TraceRoute, build_fleet_policy)
+from repro.core.velocity import (VelocityProfile,  # noqa: E402
+                                 decode_tokens_per_dollar, profile_for)
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+GOLDEN_PARETO = json.load(open(os.path.join(GOLDEN_DIR,
+                                            "pareto_coord.json")))
+
+REL_TOL = 0.15          # same band as tests/test_sim_differential.py
+ABS_TTFT = 0.020
+ABS_TPOT = 0.005
+
+
+def _close(a, b, rel, abs_tol=0.0):
+    return abs(a - b) <= max(rel * max(abs(a), abs(b)), abs_tol)
+
+
+@pytest.fixture(scope="module")
+def pareto_reports():
+    g = GOLDEN_PARETO
+    return {(eng, v): run_pareto_variant(v, g["trace"],
+                                         duration=g["duration"], engine=eng)
+            for eng in g["engines"] for v in g["variants"]}
+
+
+# ---------------------------------------------------------------------------
+# golden replay
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", list(GOLDEN_PARETO["engines"]))
+@pytest.mark.parametrize("variant", list(GOLDEN_PARETO["variants"]))
+def test_pareto_matches_golden(pareto_reports, engine, variant):
+    rep = pareto_reports[(engine, variant)]
+    want = GOLDEN_PARETO["engines"][engine][variant]
+    got = rep.summary()                  # same schema as the regenerator
+    got["cost"] = rep.cost_summary()
+    assert set(got) == set(want), (engine, variant)
+    assert got["n_requests"] == want["n_requests"]
+    for key, expect in want.items():
+        if key == "cost":
+            assert got["cost"]["cost_dollars"] == \
+                pytest.approx(expect["cost_dollars"], rel=1e-6)
+            assert got["cost"]["pool_cost"] == \
+                pytest.approx(expect["pool_cost"], rel=1e-6)
+        else:
+            assert got[key] == pytest.approx(expect, rel=1e-6), \
+                (engine, variant, key)
+
+
+# ---------------------------------------------------------------------------
+# acceptance gradient: Pareto dominance at event fidelity
+# ---------------------------------------------------------------------------
+
+def test_coord_pareto_dominates_per_model(pareto_reports):
+    """On the burst trace the coordinated planner serves at least the
+    baseline's SLO attainment while billing strictly fewer dollars — the
+    frontier point ``--bench=pareto`` plots (the ISSUE acceptance
+    criterion)."""
+    pm = pareto_reports[("events", "permodel")]
+    co = pareto_reports[("events", "coord")]
+    assert co.slo_attainment() >= pm.slo_attainment()
+    assert co.cost_summary()["cost_dollars"] < \
+        pm.cost_summary()["cost_dollars"]
+    # the win comes from cost-ranked placement: the elastic l40s pool
+    # actually absorbed decode scale-out (nonzero billing)
+    assert co.cost_summary()["pool_cost"]["dec-ll-l40s"] > 0.0
+
+
+def test_cost_accounting_consistency(pareto_reports):
+    """The exact billing integral decomposes over pools and is bounded
+    by pricing the peak fleet for the whole horizon."""
+    for rep in pareto_reports.values():
+        cs = rep.cost_summary()
+        assert cs["cost_dollars"] == \
+            pytest.approx(sum(cs["pool_cost"].values()))
+        assert cs["cost_dollars"] > 0.0
+        assert cs["cost_per_hour"] == \
+            pytest.approx(cs["cost_dollars"] / rep.duration * 3600.0)
+
+
+# ---------------------------------------------------------------------------
+# fluid vs events differential band
+# ---------------------------------------------------------------------------
+
+def test_coord_differential_band(pareto_reports):
+    """Both engines agree on the coordinated planner's aggregates within
+    the established band (DESIGN.md "Coordinated planning fidelity").
+    As in tests/test_sim_differential.py the fluid engine runs at half
+    its default tick: it converges toward the event engine as dt -> 0
+    and the default 25 ms leaves ~1.5 ticks of TTFT smearing."""
+    g = GOLDEN_PARETO
+    fl = run_pareto_variant("coord", g["trace"], duration=g["duration"],
+                            engine="fluid", dt=0.0125)
+    ev = pareto_reports[("events", "coord")]
+    assert len(fl.requests) == len(ev.requests)      # same arrivals
+    assert _close(fl.throughput(), ev.throughput(), REL_TOL, 0.1)
+    assert _close(fl.mean("ttft"), ev.mean("ttft"), REL_TOL, ABS_TTFT)
+    assert _close(fl.mean("tpot"), ev.mean("tpot"), REL_TOL, ABS_TPOT)
+    assert _close(fl.cost_summary()["cost_dollars"],
+                  ev.cost_summary()["cost_dollars"], REL_TOL)
+
+
+# ---------------------------------------------------------------------------
+# plan properties on a synthetic observation grid
+# ---------------------------------------------------------------------------
+
+def _grid_fleet() -> FleetSpec:
+    return FleetSpec(
+        pools=(
+            PoolSpec("pre-ll", "prefill", "llama31_8b", "a100", 1, init=1),
+            PoolSpec("dec-ll", "decode", "llama31_8b", "a100", 1, init=1),
+            PoolSpec("dec-ll-l40s", "decode", "llama31_8b", "l40s", 1,
+                     init=0, min=0, max=3),
+            PoolSpec("conv-ll", "convertible", "llama31_8b", "a100", 2,
+                     init=1),
+            PoolSpec("pre-qw", "prefill", "qwen25_32b", "h100", 2, init=1),
+            PoolSpec("dec-qw", "decode", "qwen25_32b", "h100", 2, init=1),
+            PoolSpec("conv-qw", "convertible", "qwen25_32b", "a100", 2,
+                     init=2),
+        ),
+        routes=(TraceRoute("llama31_8b", "burstgpt1"),
+                TraceRoute("qwen25_32b", "azure_conv")))
+
+
+def _profiles(fleet: FleetSpec):
+    return {p.name: profile_for(p.model, p.chip, p.tp) for p in fleet.pools}
+
+
+def _obs(fleet, t, rate_ll, rate_qw, burst_ll=False, conv_ll_idle=0,
+         conv_qw_idle=2):
+    snaps = {}
+    for p in fleet.pools:
+        idle = {"conv-ll": conv_ll_idle, "conv-qw": conv_qw_idle}.get(
+            p.name, p.init)
+        snaps[p.name] = PoolSnapshot(p.name, p.role, p.model, count=p.init,
+                                     ready=p.init, idle=idle)
+    gw = {
+        "llama31_8b": GatewayStats(
+            token_rate_in=rate_ll,
+            token_rate_by_bucket={"S-M": rate_ll * 0.6, "M-M": rate_ll * 0.4},
+            burst=burst_ll),
+        "qwen25_32b": GatewayStats(
+            token_rate_in=rate_qw,
+            token_rate_by_bucket={"M-M": rate_qw}),
+    }
+    return FleetObservation(t=t, pools=snaps, gateway=gw)
+
+
+@pytest.mark.parametrize("rate_ll", [0.0, 4e3, 4e4, 4e5, 4e6])
+@pytest.mark.parametrize("burst", [False, True])
+def test_plan_respects_floors_and_caps(rate_ll, burst):
+    fleet = _grid_fleet()
+    pol = CoordinatedTokenScalePolicy(fleet, _profiles(fleet))
+    by_name = {p.name: p for p in fleet.pools}
+    # t stride > down_delay so hysteresis never pins a stale current size
+    for i, rate_qw in enumerate([0.0, 1e4]):
+        plan = pol.plan(_obs(fleet, 100.0 * (i + 1), rate_ll, rate_qw,
+                             burst_ll=burst))
+        # every non-convertible pool is planned, and planned == drained
+        planned = {n for n, p in by_name.items()
+                   if p.role != "convertible"}
+        assert set(plan.targets) == planned
+        assert plan.drain == set(plan.targets)
+        for name, tgt in plan.targets.items():
+            spec = by_name[name]
+            assert tgt >= spec.min, (name, tgt)
+            if spec.max > 0:
+                assert tgt <= spec.max, (name, tgt)
+
+
+def test_spills_only_between_compatible_idle_convertibles():
+    fleet = _grid_fleet()
+    by_name = {p.name: p for p in fleet.pools}
+    pol = CoordinatedTokenScalePolicy(fleet, _profiles(fleet))
+    # llama bursting with no idle convertible; qwen calm with 2 idle ones
+    plan = pol.plan(_obs(fleet, 100.0, 4e5, 0.0, burst_ll=True,
+                         conv_ll_idle=0, conv_qw_idle=2))
+    assert plan.spills, "burst + saturated convertible must borrow"
+    for src, dst, n in plan.spills:
+        a, b = by_name[src], by_name[dst]
+        assert (a.chip, a.tp) == (b.chip, b.tp)      # spill-compatible
+        assert {a.role, b.role} == {"convertible"}
+        assert 0 < n <= a.init - 1                   # donor keeps one
+    # no spill when the burster still has an idle convertible
+    plan = pol.plan(_obs(fleet, 200.0, 4e5, 0.0, burst_ll=True,
+                         conv_ll_idle=1, conv_qw_idle=2))
+    assert not plan.spills
+    # no spill when the donor is bursting too: nothing to borrow from
+    obs = _obs(fleet, 300.0, 4e5, 1e4, burst_ll=True, conv_ll_idle=0)
+    obs.gateway["qwen25_32b"].burst = True
+    assert not pol.plan(obs).spills
+
+
+def test_registry_resolves_coord():
+    assert "tokenscale-coord" in FLEET_POLICY_REGISTRY
+    fleet = _grid_fleet()
+    pol = build_fleet_policy("tokenscale-coord", fleet, _profiles(fleet))
+    assert isinstance(pol, CoordinatedTokenScalePolicy)
+    with pytest.raises(ValueError, match="tokenscale-coord"):
+        build_fleet_policy("nope", fleet, _profiles(fleet))
+
+
+# ---------------------------------------------------------------------------
+# cost-ranked placement
+# ---------------------------------------------------------------------------
+
+def test_rank_prefers_cheaper_chip_at_equal_velocity():
+    """Two pools with identical profiled velocities but different chip
+    pricing: the walk must land demand on the cheaper one first."""
+    base = profile_for("llama31_8b", "a100", 1)
+    cheap = VelocityProfile(model=base.model, chip="l40s", tp=1,
+                            v_prefill=base.v_prefill,
+                            v_network=base.v_network,
+                            v_decode=dict(base.v_decode),
+                            max_batch=dict(base.max_batch),
+                            tpot=dict(base.tpot))
+    fleet = FleetSpec(
+        pools=(PoolSpec("pre", "prefill", "llama31_8b", "a100", 1),
+               PoolSpec("dec-a100", "decode", "llama31_8b", "a100", 1),
+               PoolSpec("dec-l40s", "decode", "llama31_8b", "l40s", 1)),
+        routes=(TraceRoute("llama31_8b", "azure_conv"),))
+    profiles = _profiles(fleet)
+    profiles["dec-l40s"] = cheap          # same speed, cheaper chip
+    pol = CoordinatedTokenScalePolicy(fleet, profiles)
+    decode = [p for p in fleet.pools if p.role == "decode"]
+    ranked = pol._rank(decode, decode_tokens_per_dollar)
+    assert [p.name for p in ranked] == ["dec-l40s", "dec-a100"]
+    # equal dollar-velocity keeps declaration order (stable sort)
+    profiles["dec-l40s"] = profiles["dec-a100"]
+    same = CoordinatedTokenScalePolicy(fleet, profiles)
+    assert [p.name for p in same._rank(decode, decode_tokens_per_dollar)] \
+        == ["dec-a100", "dec-l40s"]
+
+
+# ---------------------------------------------------------------------------
+# drain-based scale-down never strands a resident
+# ---------------------------------------------------------------------------
+
+def test_drain_never_strands_residents(monkeypatch):
+    """Instances leave a draining pool only once idle: every request in
+    the run finishes, none is evicted by a scale-down, and drains did
+    actually happen (otherwise this asserts nothing)."""
+    from repro.sim import instances as inst_mod
+    drained, reaped = [], []
+    orig = inst_mod.ClusterBase._scale_drain
+
+    def spy(self, pool, want, t, startup):
+        before = {id(i) for i in pool.instances if i.draining}
+        alive = list(pool.instances)
+        out = orig(self, pool, want, t, startup)
+        for i in alive:
+            if i.draining and id(i) not in before:
+                drained.append(id(i))
+            if not i.live and id(i) in before:
+                reaped.append((id(i), i.idle))
+        return out
+
+    monkeypatch.setattr(inst_mod.ClusterBase, "_scale_drain", spy)
+    rep = run_pareto_variant("coord", GOLDEN_PARETO["trace"],
+                             duration=GOLDEN_PARETO["duration"],
+                             engine="events")
+    assert drained, "no drain ever planned — test config is dead"
+    assert reaped, "no drained instance ever reaped"
+    for _, was_idle in reaped:
+        assert was_idle            # residents finished before removal
+    assert all(r.t_finish >= 0 for r in rep.requests)
+    assert all(r.n_evictions == 0 for r in rep.requests)
+
+
+# ---------------------------------------------------------------------------
+# deflection affinity: deflected prompts decode on their deflect target
+# ---------------------------------------------------------------------------
+
+def test_deflected_requests_decode_on_their_target(monkeypatch):
+    """A chunk-deflected prompt's KV already lives on the deflection
+    target, so decode admission is on-box: the admitting decoder is the
+    recorded ``deflect_tgt``, not whatever bucket-aware balancing would
+    pick."""
+    from repro.sim import instances as inst_mod
+    admitted = {}
+    orig = inst_mod.Decoder.admit
+
+    def spy(self, req, t):
+        admitted[req.src.rid] = self
+        return orig(self, req, t)
+
+    monkeypatch.setattr(inst_mod.Decoder, "admit", spy)
+    from benchmarks.run import run_deflect_variant
+    rep = run_deflect_variant("chunked", "burstgpt1", duration=20.0,
+                              engine="events")
+    assert rep.n_deflected > 0
+    pinned = [r for r in rep.requests if r.deflect_tgt is not None]
+    assert pinned, "no deflected request kept a live target"
+    for r in pinned:
+        assert admitted[r.src.rid] is r.deflect_tgt, r.src.rid
