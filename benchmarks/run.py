@@ -611,6 +611,82 @@ def deflect():
             emit("deflect", f"{pre},deflected", rep.n_deflected)
 
 
+#: the gateway fleet: the kvtiers contention fleet (qwen25-32B TP2 on
+#: A100-40G, 2-instance cap) driven by a hot-system-prompt session trace —
+#: 70% of arrivals share one of two Zipf-popular 1K-token system prompts
+#: across sessions.  The legacy owner-steering path only sees *session*
+#: affinity, so the cross-session prompt reuse is invisible to it; the
+#: locality gateway's block-granular hashtrie routes those arrivals to
+#: whichever decoder already holds the shared blocks (and replicates the
+#: hot prefix when one holder funnels), which is exactly the gap this
+#: bench measures.
+GATEWAY_CFG = dict(model="qwen25_32b", tp=2, duration=30.0, rps=7.0,
+                   seed=0, max_instances=2)
+GATEWAY_TRACE = "azure_code"
+GATEWAY_BLOCK = 16
+GATEWAY_SESSIONS = 0.4
+GATEWAY_SHARED = dict(shared_prefix_prob=0.7, shared_prefix_len=1024,
+                      shared_prefix_count=2)
+#: variant -> (PoolSpec.gateway, PoolSpec.kv_alloc); both run the paged
+#: allocator + prefix cache so the comparison isolates *routing* (and the
+#: allocate-on-generate paging the gateway enables), not the accounting
+GATEWAY_VARIANTS = {"owner": (False, "reserve"),
+                    "gateway": (True, "lazy")}
+
+
+def run_gateway_variant(variant: str, duration: float = None,
+                        engine: str = "events"):
+    """One gateway bench cell (shared with the golden regenerator and the
+    smoke row, so the fixture and the bench can never drift apart)."""
+    gw, alloc = GATEWAY_VARIANTS[variant]
+    cfg = dict(GATEWAY_CFG)
+    if duration is not None:
+        cfg["duration"] = duration
+    return run_policy("tokenscale", GATEWAY_TRACE, engine=engine,
+                      preemption="pause-requeue",
+                      session_prob=GATEWAY_SESSIONS,
+                      block_size=GATEWAY_BLOCK, prefix_cache=True,
+                      gateway=gw, kv_alloc=alloc, **GATEWAY_SHARED, **cfg)
+
+
+def gateway():
+    """KV-locality gateway ablation on the hot-system-prompt session
+    trace: legacy owner-steering (session-affinity only, reserve-ahead KV)
+    vs the prefix-hashtrie gateway (cross-session locality routing +
+    hot-prefix replication + allocate-on-generate paging).  The acceptance
+    gradient: the gateway strictly beats owner-steering on p99 TTFT at
+    equal-or-lower GPU count, with a strictly higher prefix hit rate
+    (pinned by tests/golden/gateway_locality.json).  Event engine by
+    default — replication completions and mid-decode OOMs are exact
+    events there."""
+    for variant in GATEWAY_VARIANTS:
+        rep = run_gateway_variant(variant, engine=ENGINE)
+        ks = rep.kv_summary()
+        pre = f"{GATEWAY_TRACE},{variant}"
+        emit("gateway", f"{pre},requests", len(rep.requests))
+        emit("gateway", f"{pre},ttft_p99_ms",
+             1e3 * rep.percentile("ttft", 99))
+        emit("gateway", f"{pre},tpot_p99_ms",
+             1e3 * rep.percentile("tpot", 99))
+        emit("gateway", f"{pre},slo_pct", 100 * rep.slo_attainment())
+        emit("gateway", f"{pre},avg_gpus", rep.avg_gpus())
+        emit("gateway", f"{pre},prefix_hit_rate_pct",
+             100 * ks["prefix_hit_rate"])
+        emit("gateway", f"{pre},peak_blocks_frac", ks["peak_blocks_frac"])
+        gw = rep.gw_summary()
+        if gw:
+            # routing-decision breakdown + replication/paging counters
+            emit("gateway", f"{pre},affinity_hits", gw["affinity_hits"])
+            emit("gateway", f"{pre},replica_hits", gw["replica_hits"])
+            emit("gateway", f"{pre},balanced_fallbacks", gw["balanced"])
+            emit("gateway", f"{pre},steered_tokens", gw["steered_tokens"])
+            emit("gateway", f"{pre},replications", gw["replications"])
+            emit("gateway", f"{pre},replica_mb", gw["replica_bytes"] / 1e6)
+            emit("gateway", f"{pre},block_grows", gw["block_grows"])
+            emit("gateway", f"{pre},oom_preemptions",
+                 gw["oom_preemptions"])
+
+
 #: the pareto fleet: a two-model cluster on mixed chips.  llama31-8B runs
 #: a bursty route on an a100 primary pair plus — for the coordinated
 #: planner only — an elastic l40s decode pool (higher decode tokens/s/$
@@ -730,8 +806,9 @@ def smoke():
     both engines, a tails smoke row (priority classes + preemption
     through the event engine), a heterogeneous-fleet row (mixed chips/TP
     through run_spec), a kvtiers row (paged KV + host-DRAM swap + prefix
-    reuse on the contended fleet), and a deflect row (chunked prefill
-    deflection on the saturated burst fleet)."""
+    reuse on the contended fleet), a gateway row (hashtrie locality
+    routing + lazy paging on the hot-prompt trace), and a deflect row
+    (chunked prefill deflection on the saturated burst fleet)."""
     from repro.sim.traces import DEFAULT_PRIORITY_MIX
     for eng in ["fluid", "events"]:
         rep = run_policy("tokenscale", "azure_conv", duration=20.0, rps=6.0,
@@ -760,6 +837,13 @@ def smoke():
     emit("smoke", "kvtiers,prefix_hit_rate_pct",
          100 * ks["prefix_hit_rate"])
     emit("smoke", "kvtiers,peak_blocks_frac", ks["peak_blocks_frac"])
+    rep = run_gateway_variant("gateway", duration=22.0)
+    gw = rep.gw_summary()
+    emit("smoke", "gateway,requests", len(rep.requests))
+    emit("smoke", "gateway,affinity_hits", gw["affinity_hits"])
+    emit("smoke", "gateway,balanced_fallbacks", gw["balanced"])
+    emit("smoke", "gateway,block_grows", gw["block_grows"])
+    emit("smoke", "gateway,ttft_p99_ms", 1e3 * rep.percentile("ttft", 99))
     rep = run_deflect_variant("chunked", duration=20.0)
     emit("smoke", "deflect,requests", len(rep.requests))
     emit("smoke", "deflect,deflected", rep.n_deflected)
@@ -823,6 +907,7 @@ BENCHES = {
     "diffval": diffval,
     "tails": tails,
     "kvtiers": kvtiers,
+    "gateway": gateway,
     "deflect": deflect,
     "pareto": pareto,
     "hetero": hetero,

@@ -119,6 +119,41 @@ def regen_kvtiers():
     return "kvtiers_session.json", out
 
 
+def regen_gateway():
+    """KV-locality gateway golden on the hot-system-prompt session trace
+    (benchmarks.run.run_gateway_variant, so the fixture and the bench
+    share one recipe): per-variant summary + routing/replication/paging
+    counters through both engines, pinning the acceptance gradient — the
+    hashtrie gateway strictly beats owner-steering on p99 TTFT at
+    equal-or-lower GPU count, with a strictly higher prefix hit rate."""
+    from benchmarks.run import (GATEWAY_BLOCK, GATEWAY_CFG, GATEWAY_SESSIONS,
+                                GATEWAY_SHARED, GATEWAY_TRACE,
+                                GATEWAY_VARIANTS, run_gateway_variant)
+    out = {"trace": GATEWAY_TRACE, "block_size": GATEWAY_BLOCK,
+           "session_prob": GATEWAY_SESSIONS,
+           "shared_prefix": dict(GATEWAY_SHARED),
+           "fleet": dict(GATEWAY_CFG),
+           "variants": {v: list(gv) for v, gv in GATEWAY_VARIANTS.items()},
+           "engines": {}}
+    for eng in ["fluid", "events"]:
+        rows = {}
+        for variant in GATEWAY_VARIANTS:
+            rep = run_gateway_variant(variant, engine=eng)
+            kv = {k: (None if isinstance(v, float) and not math.isfinite(v)
+                      else v)
+                  for k, v in rep.kv_summary().items()}
+            rows[variant] = {
+                "n_requests": len(rep.requests),
+                "ttft_p99": rep.percentile("ttft", 99),
+                "slo_attainment": rep.slo_attainment(),
+                "avg_gpus": rep.avg_gpus(),
+                "kv": kv,                 # schema shared with the test
+                "gw": rep.gw_summary(),   # routing/replication/paging
+            }
+        out["engines"][eng] = rows
+    return "gateway_locality.json", out
+
+
 def regen_deflect():
     """Chunked-deflection golden on the saturated burst fleet
     (benchmarks.run.run_deflect_variant, so the fixture and the bench
@@ -191,6 +226,7 @@ def main(argv=None):
                        regen_priority_preemption(),
                        regen_hetero_fleet(),
                        regen_kvtiers(),
+                       regen_gateway(),
                        regen_deflect(),
                        regen_pareto()]:
         path = os.path.join(HERE, name)

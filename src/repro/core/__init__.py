@@ -9,6 +9,8 @@
   hardware     — chip profiles + analytic step-latency model
   fleet        — pool-centric control plane: PoolSpec/FleetSpec/
                  ExperimentSpec, FleetObservation/FleetPlan, FleetPolicy
+  gateway      — KV-locality placement: prefix hashtrie, locality score,
+                 hot-prefix replication planning
 """
 from repro.core.autoscaler import (  # noqa: F401
     POLICY_REGISTRY, AIBrixPolicy, BlitzScalePolicy, DistServePolicy,
@@ -23,6 +25,10 @@ from repro.core.fleet import (  # noqa: F401
     ExperimentSpec, FleetObservation, FleetPlan, FleetPolicy, FleetSpec,
     GatewayStats, PerModelFleetPolicy, PoolSnapshot, PoolSpec, TraceRoute,
     single_pool_fleet,
+)
+from repro.core.gateway import (  # noqa: F401
+    Gateway, GatewayConfig, PrefixHashTrie, ReplicationJob, RoutingStats,
+    prefix_chain,
 )
 from repro.core.hardware import CHIPS, ChipSpec, InstanceSpec  # noqa: F401
 from repro.core.predictor import OutputPredictor  # noqa: F401

@@ -88,6 +88,20 @@ class PoolSpec:
     # additionally makes the instances deflection targets (Alg. 1 round
     # 2b).  0 keeps the legacy wholesale-conversion path byte-for-byte.
     prefill_chunking: int = 0
+    # ---- KV-locality gateway (core.gateway; decode/convertible roles) ----
+    # route this pool's decode placements through the fleet-level prefix
+    # hashtrie gateway: block-granular cross-session prefix matching, a
+    # cached_suffix_savings - alpha*queue_depth locality score, and
+    # hot-prefix replication across decoders.  Requires the paged
+    # allocator with prefix_cache.  False keeps the PR 4 owner-steering
+    # lookup byte-for-byte.
+    gateway: bool = False
+    # KV allocation mode for the pool's decoders: "reserve" books the
+    # full predicted output length at admission (legacy, byte-identical);
+    # "lazy" allocates-on-generate — admission books prompt + one output
+    # block and owned blocks grow per generated token, with mid-decode
+    # OOM preemption through the existing PreemptionPolicy on exhaustion.
+    kv_alloc: str = "reserve"
 
     def __post_init__(self):
         if self.role not in ROLES:
@@ -114,6 +128,23 @@ class PoolSpec:
             raise ValueError(
                 f"pool {self.name!r}: prefill_chunking applies to decode-"
                 "side pools (prefillers always run whole prompts)")
+        if self.kv_alloc not in ("reserve", "lazy"):
+            raise ValueError(
+                f"pool {self.name!r}: kv_alloc must be 'reserve' or "
+                f"'lazy' (got {self.kv_alloc!r})")
+        if self.kv_alloc == "lazy" and self.block_size <= 0:
+            raise ValueError(
+                f"pool {self.name!r}: kv_alloc='lazy' needs the paged "
+                "allocator (block_size > 0)")
+        if self.gateway:
+            if self.role == "prefill":
+                raise ValueError(
+                    f"pool {self.name!r}: gateway applies to decode-side "
+                    "pools (placement of decode admissions)")
+            if self.block_size <= 0 or not self.prefix_cache:
+                raise ValueError(
+                    f"pool {self.name!r}: gateway needs the paged prefix "
+                    "cache (block_size > 0, prefix_cache=True)")
 
     @property
     def key(self) -> tuple[str, str, int]:
@@ -128,12 +159,22 @@ class TraceRoute:
     ``session_prob`` turns the workload conversational: each arrival is a
     same-session follow-up with this probability, its prompt extending the
     session's shared prefix (``sim.traces.assign_sessions``; the draw uses
-    an independent RNG stream, so arrivals stay byte-identical)."""
+    an independent RNG stream, so arrivals stay byte-identical).
+
+    ``shared_prefix_prob`` adds Zipf-popular system prompts shared
+    *across* sessions (``sim.traces.assign_shared_prefixes``): each
+    conversation opener starts from one of ``shared_prefix_count``
+    catalog prompts with this probability, and follow-ups inherit the
+    opener's prompt.  Again an independent RNG stream — arrivals (and
+    the session draw) stay byte-identical."""
     model: str
     trace: str = "mixed"
     rps: float = 8.0
     priority_mix: Optional[dict[int, float]] = None
     session_prob: float = 0.0
+    shared_prefix_prob: float = 0.0
+    shared_prefix_len: int = 512
+    shared_prefix_count: int = 8
 
 
 @dataclass(frozen=True)
@@ -194,15 +235,21 @@ def single_pool_fleet(model: str = "llama31_8b", chip: str = "a100",
                       hbm_frac: float = 0.9,
                       offload_gb: Optional[float] = None,
                       prefix_cache: bool = False,
-                      prefill_chunking: int = 0) -> FleetSpec:
+                      prefill_chunking: int = 0,
+                      gateway: bool = False,
+                      kv_alloc: str = "reserve",
+                      shared_prefix_prob: float = 0.0,
+                      shared_prefix_len: int = 512,
+                      shared_prefix_count: int = 8) -> FleetSpec:
     """The classic homogeneous PD fleet as a one-model spec — what the
     legacy ``run_policy(policy, trace, model, chip, tp, ...)`` signature
-    desugars to.  The KV-tier knobs and ``prefill_chunking`` apply to the
-    decode-side pools; the defaults keep the legacy flat-byte-counter,
-    wholesale-conversion behavior."""
+    desugars to.  The KV-tier, ``prefill_chunking``, and gateway knobs
+    apply to the decode-side pools; the defaults keep the legacy
+    flat-byte-counter, wholesale-conversion, owner-steering behavior."""
     kv = dict(block_size=block_size, hbm_frac=hbm_frac,
               offload_gb=offload_gb, prefix_cache=prefix_cache,
-              prefill_chunking=prefill_chunking)
+              prefill_chunking=prefill_chunking, gateway=gateway,
+              kv_alloc=kv_alloc)
     pools = [
         PoolSpec("prefill", "prefill", model, chip, tp, init=init_prefillers,
                  hbm_frac=hbm_frac),
@@ -213,7 +260,10 @@ def single_pool_fleet(model: str = "llama31_8b", chip: str = "a100",
     ]
     return FleetSpec(tuple(pools),
                      (TraceRoute(model, trace, rps, priority_mix,
-                                 session_prob=session_prob),))
+                                 session_prob=session_prob,
+                                 shared_prefix_prob=shared_prefix_prob,
+                                 shared_prefix_len=shared_prefix_len,
+                                 shared_prefix_count=shared_prefix_count),))
 
 
 @dataclass(frozen=True)
@@ -255,6 +305,18 @@ class ExperimentSpec:
             # pre-cap schema)
             if not p.get("max"):
                 p.pop("max", None)
+            # ...and for the gateway knobs (off/reserve = the pre-gateway
+            # schema)
+            if not p.get("gateway"):
+                p.pop("gateway", None)
+            if p.get("kv_alloc") == "reserve":
+                p.pop("kv_alloc", None)
+        for r in d["fleet"]["routes"]:
+            # shared-prefix knobs off -> the pre-knob route schema
+            if not r.get("shared_prefix_prob"):
+                r.pop("shared_prefix_prob", None)
+                r.pop("shared_prefix_len", None)
+                r.pop("shared_prefix_count", None)
         return d
 
     def to_json(self, **kw) -> str:

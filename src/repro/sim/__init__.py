@@ -9,8 +9,9 @@ from repro.sim.kvcache import (  # noqa: F401
 )
 from repro.sim.traces import (  # noqa: F401
     DEFAULT_PRIORITY_MIX, PRIORITY_CLASSES, TRACES, TraceRequest, TraceSpec,
-    TraceStats, assign_priorities, assign_sessions, generate, generate_mixed,
-    get_trace, step_trace, stream_trace, trace_stats,
+    TraceStats, assign_priorities, assign_sessions, assign_shared_prefixes,
+    generate, generate_mixed, get_trace, step_trace, stream_trace,
+    trace_stats,
 )
 from repro.sim.runner import (  # noqa: F401
     ENGINES, build_fleet, build_traces, compare_engines, compare_policies,

@@ -205,6 +205,12 @@ class EventCluster(ClusterBase):
         "KV-tier fidelity")."""
         self._admit_pending(t)
 
+    def _ev_replica_done(self, t: float):
+        """A hot-prefix replication's interconnect transfer completed
+        *exactly now*: install the copy on its target (the fluid engine
+        approximates the same completion at tick granularity)."""
+        self._service_gateway(t)
+
     def _ev_iter_done(self, t: float, d: Decoder, it: float):
         d._iter_pending = False
         if not d.live:
@@ -257,6 +263,12 @@ class EventCluster(ClusterBase):
         elif d.is_convertible and d.prefill_q and d.conv:
             # legacy wholesale conversion (Eq. 5 restricted rate)
             d.advance_prefill(d.conv.v_prefill * it, t)
+        if d.lazy and d.active:
+            # allocate-on-generate: each surviving resident's next token
+            # needs a backed block before the next iteration is scheduled;
+            # failures land in oom_pending and are resolved inside the
+            # _admit_pending call below (exact mid-decode OOM preemption)
+            d.grow_lazy(t)
         self._admit_pending(t)             # memory freed by completions
         self._kick_decoder(d, t)
 
@@ -341,3 +353,8 @@ class EventCluster(ClusterBase):
         # pending_decode; retry admission exactly when its recompute /
         # swap delay elapses — the swap-completion event
         self._push(entry[0], "swap_done")
+
+    def _on_replication(self, job):
+        # hot-prefix copy completes exactly when its interconnect
+        # transfer does
+        self._push(job.t_done, "replica_done")

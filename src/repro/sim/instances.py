@@ -46,6 +46,8 @@ from repro.core.convertible import ConvertibleConfig
 from repro.core.fleet import (FleetObservation, FleetPolicy, GatewayStats,
                               PerModelFleetPolicy, PoolSnapshot, PoolSpec,
                               flat_observation)
+from repro.core.gateway import (Gateway, GatewayConfig, RoutingStats,
+                                prefix_chain)
 from repro.core.hardware import InstanceSpec
 from repro.core.predictor import OutputPredictor
 from repro.core.router import (PRIORITY_STANDARD, BurstDetector, Router,
@@ -320,6 +322,15 @@ class Decoder(Instance):
         # on-box convertible completions that found no blocks free wait
         # here for the shared pending_decode path (kv mode only)
         self.kv_spill: list[tuple[float, SimRequest]] = []
+        # ---- gateway / lazy paging (PoolSpec.gateway / kv_alloc) ----
+        # lazy: admission reserves context + 1 token instead of the full
+        # predicted output; blocks grow per generated token (grow_lazy)
+        self.lazy = False
+        self.gateway: Optional[Gateway] = None      # model group's gateway
+        self.gw_stats: Optional[RoutingStats] = None
+        # residents whose per-token block grow found no HBM free: the
+        # cluster resolves them (retry / preempt) in _admit_pending
+        self.oom_pending: list[SimRequest] = []
         # ---- hot-path aggregates (DESIGN.md "Performance") ----
         # float aggregates are dirty-flag caches over the identical
         # from-scratch reduction (bitwise-stable); integer residency
@@ -478,10 +489,22 @@ class Decoder(Instance):
         c = self.cost
         return (req.src.in_len + req.src.out_len) * c.kv_tok + c.state_fix
 
+    def _admit_bytes(self, req: SimRequest) -> float:
+        """Admission-time KV reservation: the full-length reservation, or
+        — under allocate-on-generate paging (``PoolSpec.kv_alloc="lazy"``)
+        — just the context so far plus one token's slack; the rest grows
+        per generated token (``grow_lazy``) and exhaustion is handled by
+        mid-decode preemption instead of being reserved away up front."""
+        if not self.lazy:
+            return self._need_bytes(req)
+        c = self.cost
+        return (req.src.in_len + req.generated + 1.0) * c.kv_tok \
+            + c.state_fix
+
     def can_admit(self, req: SimRequest) -> bool:
         if self.kv is not None:
-            return self.kv.can_admit(req.src.rid, self._need_bytes(req))
-        return self.mem_used() + self._need_bytes(req) <= self.mem_cap()
+            return self.kv.can_admit(req.src.rid, self._admit_bytes(req))
+        return self.mem_used() + self._admit_bytes(req) <= self.mem_cap()
 
     def inflight_of_bucket(self, bucket: str) -> int:
         # incrementally-maintained integer residency counter (exact)
@@ -562,7 +585,7 @@ class Decoder(Instance):
         if self.kv is not None:
             # consumes this request's pin (CoW-shared prefix blocks), if
             # the pin lives on this decoder
-            self.kv.admit(req.src.rid, self._need_bytes(req))
+            self.kv.admit(req.src.rid, self._admit_bytes(req))
             req.kv_prefix = None
         self.active.append(req)
         self._admit_seq += 1
@@ -572,10 +595,49 @@ class Decoder(Instance):
 
     def _kv_release(self, req: SimRequest, t: float):
         """Free the finished request's blocks, leaving its prompt+output
-        prefix cached under its session for follow-up reuse."""
-        if self.kv is not None:
-            self.kv.release(req.src.rid, req.session,
-                            int(req.src.in_len + req.generated), t)
+        prefix cached under its session for follow-up reuse.  With the
+        gateway on, the shared system prompt is additionally aliased under
+        its fleet-wide key (cross-session reuse) and this decoder is
+        marked as a holder in the fleet's prefix hashtrie."""
+        if self.kv is None:
+            return
+        gw = self.gateway
+        src = req.src
+        ctx = int(src.in_len + req.generated)
+        if gw is not None:
+            shid = getattr(src, "shared_id", -1)
+            shlen = getattr(src, "shared_len", 0)
+            if shid >= 0 and shlen > 0:
+                # alias before release: the allocation's blocks are live
+                self.kv.cache_alias(("sys", shid), src.rid, shlen, t)
+        self.kv.release(src.rid, req.session, ctx, t)
+        if gw is not None:
+            chain = prefix_chain(
+                getattr(src, "shared_id", -1),
+                getattr(src, "shared_len", 0),
+                req.session, ctx, gw.block_size)
+            if chain:
+                gw.trie.insert(chain, self, t, gw.block_size)
+
+    def grow_lazy(self, t: float):
+        """Allocate-on-generate: after an iteration's tokens land, extend
+        each resident's blocks to cover its next token.  A resident whose
+        grow finds no HBM (even after reclaiming cached prefixes) joins
+        ``oom_pending`` for the cluster to resolve — the model carries at
+        most one unbacked token per resident until then (the event engine
+        resolves it before the next iteration is scheduled; the fluid
+        engine at tick granularity)."""
+        kv, st = self.kv, self.gw_stats
+        for r in self.active:
+            if r.t_finish >= 0:
+                continue
+            added = kv.try_grow(r.src.rid, self._admit_bytes(r))
+            if added is None:
+                st.grow_failures += 1
+                if r not in self.oom_pending:
+                    self.oom_pending.append(r)
+            elif added:
+                st.block_grows += added
 
     def iter_time(self) -> float:
         it = self._iter_cache
@@ -756,6 +818,8 @@ class Decoder(Instance):
             self.active = [r for r in self.active if r.t_finish < 0]
             for r in finished:
                 self._count_remove(r)
+        if self.lazy and self.kv is not None and self.active:
+            self.grow_lazy(t)
         return finished
 
     @property
@@ -810,6 +874,9 @@ class ModelGroup:
         self.decode = self.decode_pools[0]
         self.convertible = convertible
         self.router = Router(BurstDetector())
+        # locality gateway (core.gateway) — built by ClusterBase when any
+        # of this model's decode-side pools sets PoolSpec.gateway
+        self.gateway: Optional[Gateway] = None
         # deflection (Alg. 1 round 2b) is enabled per model by a decode
         # pool's chunking knob; convertible pools with chunking keep their
         # round-2 slot but execute chunk-interleaved instead of wholesale
@@ -909,6 +976,11 @@ class SimReport:
     preemptions: list[tuple] = field(default_factory=list)
     # KV-tier counters (sim.kvcache.KVStats.summary(); {} when tiers off)
     kv: dict = field(default_factory=dict)
+    # gateway routing/replication/lazy-paging counters
+    # (core.gateway.RoutingStats.summary(); {} when no pool enables the
+    # gateway or lazy paging — kept separate from ``kv`` so the kvtiers
+    # golden's pinned schema never changes)
+    gw: dict = field(default_factory=dict)
     # events processed by the run (event engine; 0 for fluid) — the
     # perf-bench suite's events/sec numerator (benchmarks/perf.py)
     n_events: int = 0
@@ -1083,6 +1155,14 @@ class SimReport:
                                                     preempted=True)
         return out
 
+    def gw_summary(self) -> dict:
+        """Gateway metrics: routing-decision breakdown (affinity hit /
+        replica hit / load-balanced fallback), replication traffic, and
+        lazy-paging counters — the schema the ``gateway_locality`` golden
+        and its regenerator share.  Empty when no pool enables the
+        gateway or lazy paging."""
+        return dict(self.gw)
+
 
 # ---------------------------------------------------------------------------
 # Control plane glue — shared by both engines
@@ -1158,6 +1238,24 @@ class ClusterBase:
         self._kv_on = any(
             p.spec.block_size > 0 and p.spec.role != "prefill"
             and p.cost.kv_tok > 0 for p in self.pools.values())
+        # ---- locality gateway + lazy paging (core.gateway) ----
+        # one counter sink across all model groups' gateways; per-group
+        # Gateway objects own the trie (placement is per model).  _gw_on
+        # gates every gateway/lazy hook so legacy fleets stay byte-
+        # identical (the six pre-gateway goldens pin this).
+        self.gw_stats = RoutingStats()
+        self._gw_jobs: list = []      # pending ReplicationJobs, by t_done
+        self._gw_on = any(p.spec.kv_alloc == "lazy"
+                          for p in self.pools.values())
+        for g in fleet.groups.values():
+            gpools = [p for p in g.decode_pools if p.spec.gateway]
+            if g.convertible is not None and g.convertible.spec.gateway:
+                gpools.append(g.convertible)
+            if gpools:
+                g.gateway = Gateway(GatewayConfig(),
+                                    gpools[0].spec.block_size,
+                                    self.gw_stats)
+                self._gw_on = True
         self._iid = 0
         for pool in self.pools.values():     # declaration order = iid order
             for _ in range(pool.spec.init):
@@ -1223,6 +1321,10 @@ class ClusterBase:
             i.chunking = pool.spec.prefill_chunking
             if pool.spec.block_size > 0 and pool.cost.kv_tok > 0:
                 i.kv = self._make_allocator(pool, i)
+            i.lazy = pool.spec.kv_alloc == "lazy" and i.kv is not None
+            i.gw_stats = self.gw_stats
+            if pool.spec.gateway:
+                i.gateway = self.fleet.groups[pool.spec.model].gateway
         i.pool = pool
         return i
 
@@ -1320,7 +1422,10 @@ class ClusterBase:
         req.bucket_pred = self.predictor.predict_bucket(
             req.src.in_len, req.src.out_len)
         if self._kv_on:
-            self._kv_lookup(g, req, t)
+            if g.gateway is not None:
+                self._gw_lookup(g, req, t)
+            else:
+                self._kv_lookup(g, req, t)
         arrivals = self._arrivals
         arrivals.append((t, req))
         while t - arrivals[0][0] > 5.0:
@@ -1448,6 +1553,143 @@ class ClusterBase:
         st.hits += 1
         st.hit_tokens += usable
 
+    # ---- locality gateway (core.gateway; DESIGN.md "Routing fidelity") --
+    def _gw_lookup(self, g: ModelGroup, req: SimRequest, t: float):
+        """Gateway placement: map the arrival's block-label chain through
+        the fleet prefix hashtrie, score holders by ``cached_suffix_savings
+        - alpha * queue_depth``, and pin the winner's prefix — session
+        chains, cross-session shared prompts, and hot-prefix replicas all
+        route through this one mechanism (it replaces the session-only
+        owner steering of ``_kv_lookup`` for gateway pools).  No usable
+        holder — or a score the least-loaded candidate beats — falls
+        through to the share-of-capacity balancer in ``_admit_pending``,
+        exactly like a cache miss."""
+        gw = g.gateway
+        cands = [d for d in g.decode_instances()
+                 if d.kv is not None and d.ready(t) and not d.draining]
+        if not cands:
+            return
+        st = self.kv_stats
+        st.lookups += 1
+        st.prompt_tokens += req.src.in_len
+        chain = gw.chain_of(req.src)
+        if not chain:
+            gw.stats.balanced += 1
+            return
+        best = gw.best_holder(
+            chain, t,
+            lambda h: h.live and h.kv is not None and h.ready(t)
+            and not h.draining)
+        for job in gw.plan_replication(chain, t, cands):
+            self._gw_dispatch(gw, job, t)
+        if best is None:
+            gw.stats.balanced += 1
+            return
+        holder, node, depth, replica, score = best
+        q_min = min(len(d.active) for d in cands)
+        if score <= -gw.cfg.alpha * q_min:
+            # locality discounted by queue depth loses to the balancer's
+            # least-loaded pick: don't steer
+            gw.stats.balanced += 1
+            return
+        # the trie is advisory — validate against the holder's allocator
+        # (the ground truth) and round to its own block geometry
+        key = gw.cache_key(node.label, req.session)
+        tok, tier = holder.kv.lookup(key, depth)
+        bs = holder.kv.cfg.block_size
+        usable = (min(tok, depth, req.src.in_len - 1) // bs) * bs
+        if usable <= 0:
+            node.holders.pop(holder, None)     # stale marking: drop it
+            gw.stats.balanced += 1
+            return
+        holder.kv.pin(req.src.rid, key, usable, t)
+        req.kv_hit_tokens = usable
+        req.kv_prefix = (holder, usable, tier)
+        st.hits += 1
+        st.hit_tokens += usable
+        gw.stats.steered_tokens += usable
+        if replica:
+            gw.stats.replica_hits += 1
+        else:
+            gw.stats.affinity_hits += 1
+
+    def _gw_dispatch(self, gw: Gateway, job, t: float):
+        """Stamp a planned hot-prefix copy with its interconnect cost —
+        the ``migration_stall`` formula (prefix bytes over the origin
+        chip's net bandwidth) — and queue it for completion."""
+        src = job.source
+        stall = src.kv.token_bytes(job.tokens) \
+            / max(src.spec.chip.net_bw, 1e-9)
+        job.t_done = t + stall
+        job.gw = gw
+        gw.stats.replica_stall_s += stall
+        insort(self._gw_jobs, job, key=lambda j: j.t_done)
+        self._on_replication(job)
+
+    def _on_replication(self, job):
+        """Engine hook: the event engine schedules the exact replica_done
+        event; the fluid engine completes due jobs at tick granularity
+        via the ``_admit_pending`` preamble."""
+
+    def _service_gateway(self, t: float):
+        """Complete due hot-prefix replications and resolve lazy-paging
+        OOMs.  Runs in the ``_admit_pending`` preamble: every tick in the
+        fluid engine; on each admission-relevant event — plus the exact
+        replica_done events — in the event engine."""
+        jobs = self._gw_jobs
+        while jobs and jobs[0].t_done <= t:
+            job = jobs.pop(0)
+            job.node.pending = False
+            gw, src, tgt = job.gw, job.source, job.target
+            if not (src.live and src.kv is not None and tgt.live
+                    and tgt.kv is not None and not tgt.draining):
+                continue
+            tok, tier = src.kv.lookup(job.key, job.tokens)
+            if tok < job.tokens or tier != "hbm":
+                continue               # origin lost the prefix mid-flight
+            if tgt.kv.install(job.key, job.tokens, t):
+                gw.trie.insert(job.chain, tgt, t, gw.block_size,
+                               replica=True)
+                gw.stats.replications += 1
+                gw.stats.replica_bytes += tgt.kv.token_bytes(job.tokens)
+        for pool in self.pools.values():
+            if pool.spec.kv_alloc != "lazy":
+                continue
+            for d in pool.instances:
+                if d.oom_pending:
+                    self._service_oom(d, t)
+
+    def _service_oom(self, d: Decoder, t: float):
+        """Mid-decode OOM (allocate-on-generate): a resident's per-token
+        block grow found no HBM free.  Retry first (completions since the
+        failure may have freed blocks); then preempt strictly-lower-
+        priority residents through the existing ``PreemptionPolicy``
+        machinery; as the last resort the starved request itself is
+        evicted (recompute/swap like any other victim) — decode never
+        deadlocks on an unbacked token."""
+        pend, d.oom_pending = d.oom_pending, []
+        st = self.gw_stats
+        for r in pend:
+            if r.t_finish >= 0 or r not in d.active:
+                continue
+            if d.kv.try_grow(r.src.rid, d._admit_bytes(r)) is not None:
+                continue
+            victims = self._victim_order(
+                [v for v in d.active
+                 if v is not r and v.t_finish < 0
+                 and v.priority > r.priority], d, t) \
+                if self.preemption.enabled else []
+            grown = False
+            for v in victims:
+                self._evict(d, v, r, t)
+                st.oom_preemptions += 1
+                if d.kv.try_grow(r.src.rid, d._admit_bytes(r)) is not None:
+                    grown = True
+                    break
+            if not grown:
+                self._evict(d, r, r, t)
+                st.oom_preemptions += 1
+
     def _to_network(self, req: SimRequest, t: float,
                     pool: Optional[Pool] = None) -> tuple[float, SimRequest]:
         req.t_prefill_end = t
@@ -1490,6 +1732,9 @@ class ClusterBase:
         with *more* free memory than before, so it resets the
         short-circuit.  Paged-KV fleets skip the fast path: prefix pins
         make the reservation per-decoder."""
+        if self._gw_on:
+            # due hot-prefix replications + lazy-paging OOM resolution
+            self._service_gateway(t)
         if self._kv_on:
             # on-box convertible completions that found no blocks free
             for pool in self.pools.values():
@@ -1663,7 +1908,7 @@ class ClusterBase:
                 continue
             if d.kv is not None:
                 need: float = d.kv.need_blocks(req.src.rid,
-                                               d._need_bytes(req))
+                                               d._admit_bytes(req))
                 free: float = d.kv.available()
                 evictable: float = sum(d.kv.owned_blocks(v.src.rid)
                                        for v in victims)
@@ -1965,6 +2210,7 @@ class ClusterBase:
                          engine=self.engine,
                          preemptions=list(self.preemption_log),
                          kv=self.kv_stats.summary() if self._kv_on else {},
+                         gw=self.gw_stats.summary() if self._gw_on else {},
                          n_events=getattr(self, "n_events", 0),
                          n_deflected=self.n_deflected,
                          cost_dollars=self.cost_dollars,

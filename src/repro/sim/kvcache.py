@@ -151,8 +151,14 @@ class KVAllocator:
         self.hard: dict[int, int] = {}         # block -> alloc+pin references
         self.hard_used = 0                     # len({b: hard[b] > 0})
         self.allocs: dict[int, _Allocation] = {}      # rid -> allocation
-        self.sessions: dict[int, _CacheEntry] = {}    # sid -> prefix entry
+        # key -> prefix entry; keys are session ids (ints) or gateway
+        # shared-prompt aliases (("sys", prompt_id) tuples) — any hashable
+        self.sessions: dict = {}
         self.pins: dict[int, _Pin] = {}               # rid -> arrival pin
+        # entries dropped (replaced by a longer prefix) while arrival pins
+        # still referenced them: kept here until the pins drain so
+        # ``check()`` can prove no pin ever dangles (the pin-leak audit)
+        self._retired: list[_CacheEntry] = []
         self.dram_free = cfg.n_dram
         self.tickets: dict[int, int] = {}      # rid -> swapped-out blocks
         # ---- admission-path cache (DESIGN.md "Performance") ----
@@ -268,14 +274,21 @@ class KVAllocator:
             out.append(b)
         return out
 
-    def _drop_entry(self, sid: int):
+    def _drop_entry(self, key):
         self._mutated()
-        e = self.sessions.pop(sid)
+        e = self.sessions.pop(key)
         if e.tier == "hbm":
             for b in e.ids:
                 self._decref(b)
         else:
             self.dram_free += e.dram_blocks
+        # the entry's own storage is gone either way (HBM refs released,
+        # DRAM blocks freed — byte-identical to the historical drop); if
+        # arrival pins still reference it, park it on the retired list so
+        # the no-stale-pins invariant can account for them until unpin
+        e.ids, e.dram_blocks, e.tier = (), 0, "retired"
+        if e.pins > 0:
+            self._retired.append(e)
 
     def _reclaim_one(self) -> bool:
         """Reclaim the LRU unpinned HBM cache entry; demote it to the DRAM
@@ -285,7 +298,12 @@ class KVAllocator:
                  if e.tier == "hbm" and e.pins == 0]
         if not cands:
             return False
-        sid, e = min(cands, key=lambda kv: (kv[1].last_use, kv[0]))
+        # keys mix legacy int session ids with ("sys", pid) tuples; the
+        # type flag partitions them so the tie-break never compares across
+        # types (ints first, preserving the historical int ordering)
+        sid, e = min(cands, key=lambda kv: (
+            kv[1].last_use, isinstance(kv[0], tuple),
+            kv[0] if isinstance(kv[0], tuple) else (kv[0],)))
         n = len(e.ids)
         if self.dram_free >= n > 0:
             self.dram_free -= n
@@ -299,26 +317,29 @@ class KVAllocator:
         return True
 
     # ---- prefix tree -------------------------------------------------
-    def lookup(self, sid: int, prefix_len: int) -> tuple[int, str]:
-        """Reusable full-block prefix tokens for a session follow-up, and
-        the tier they live in.  (0, "") on miss."""
-        if not self.cfg.prefix_cache or sid < 0:
+    def lookup(self, key, prefix_len: int) -> tuple[int, str]:
+        """Reusable full-block prefix tokens under ``key`` — a session id
+        (int) or a gateway shared-prompt alias (tuple) — and the tier they
+        live in.  (0, "") on miss."""
+        if not self.cfg.prefix_cache or key is None \
+                or (isinstance(key, int) and key < 0):
             return 0, ""
-        e = self.sessions.get(sid)
+        e = self.sessions.get(key)
         if e is None:
             return 0, ""
         bs = self.cfg.block_size
         usable = (min(e.tokens, prefix_len) // bs) * bs
         return (usable, e.tier) if usable > 0 else (0, "")
 
-    def pin(self, rid: int, sid: int, tokens: int, t: float):
+    def pin(self, rid: int, key, tokens: int, t: float):
         """Reserve a looked-up prefix for ``rid`` until it is admitted (or
         the hit is abandoned): HBM pins take a reference on each shared
-        block, DRAM pins just hold the entry against eviction."""
+        block, DRAM pins just hold the entry against eviction.  ``key`` is
+        a session id or a gateway shared-prompt alias."""
         if rid in self.pins:
             raise KVError(f"request {rid} already holds a pin")
         self._mutated()
-        e = self.sessions[sid]
+        e = self.sessions[key]
         e.last_use = t
         e.pins += 1
         if e.tier == "hbm":
@@ -335,10 +356,20 @@ class KVAllocator:
         if pin is None:
             return
         self._mutated()
-        pin.entry.pins -= 1
+        self._entry_unpin(pin.entry)
         for b in pin.ids:
             self._hard_dec(b)
             self._decref(b)
+
+    def _entry_unpin(self, e: _CacheEntry):
+        e.pins -= 1
+        if e.pins == 0 and e.tier == "retired":
+            # identity removal: _CacheEntry is a value-comparing dataclass
+            # and two drained retired entries can be field-equal
+            for i, x in enumerate(self._retired):
+                if x is e:
+                    del self._retired[i]
+                    break
 
     # ---- admission / release -----------------------------------------
     def admit(self, rid: int, nbytes: float):
@@ -353,7 +384,7 @@ class KVAllocator:
         shared: list[int] = []
         shared_tokens = 0
         if pin is not None:
-            pin.entry.pins -= 1
+            self._entry_unpin(pin.entry)
             if pin.tier == "hbm":
                 # the pin's block+hard references transfer to the allocation
                 shared, shared_tokens = list(pin.ids), pin.tokens
@@ -362,6 +393,85 @@ class KVAllocator:
         n_new = max(self.blocks_for(nbytes) - len(shared), 0)
         owned = self._alloc(n_new)
         self.allocs[rid] = _Allocation(shared, owned, shared_tokens)
+
+    def try_grow(self, rid: int, nbytes: float) -> Optional[int]:
+        """Allocate-on-generate paging: extend ``rid``'s allocation so it
+        covers ``nbytes`` total.  Returns the number of blocks added (0 if
+        already covered), or None when the decoder is out of blocks even
+        after reclaiming unpinned cache entries — the mid-decode OOM the
+        cluster resolves by preempting (never raises: exhaustion is
+        backpressure here, not a control-plane bug)."""
+        a = self.allocs.get(rid)
+        if a is None:
+            raise KVError(f"grow of unknown request {rid}")
+        need = self.blocks_for(nbytes) - len(a.shared) - len(a.owned)
+        if need <= 0:
+            return 0
+        if self.available() < need:
+            return None
+        a.owned.extend(self._alloc(need))
+        return need
+
+    def cache_alias(self, key, rid: int, tokens: int, t: float) -> int:
+        """Cache the first ``tokens`` (rounded down to full blocks) of
+        ``rid``'s *live* allocation under an additional key — the gateway's
+        shared-prompt alias, taken just before ``release`` so cross-session
+        arrivals can reuse the hot system prompt.  Entry references only
+        (reclaimable, no admission pressure).  A shorter or pin-free
+        existing alias is replaced; a pinned one is left alone (in-flight
+        arrivals rely on it).  Returns the tokens cached (0 if skipped)."""
+        if not self.cfg.prefix_cache or tokens <= 0:
+            return 0
+        a = self.allocs.get(rid)
+        if a is None:
+            raise KVError(f"alias of unknown request {rid}")
+        bs = self.cfg.block_size
+        blocks = a.shared + a.owned
+        keep = min(tokens // bs, len(blocks))
+        if keep <= 0:
+            return 0
+        old = self.sessions.get(key)
+        if old is not None:
+            if old.pins > 0 or old.tokens >= keep * bs:
+                old.last_use = t
+                return 0
+            self._drop_entry(key)
+        ids = blocks[:keep]
+        for b in ids:
+            self._incref(b)
+        self.sessions[key] = _CacheEntry(tuple(ids), keep * bs, t)
+        return keep * bs
+
+    def install(self, key, tokens: int, t: float) -> bool:
+        """Hot-prefix replication landing: materialize a ``tokens``-long
+        cache entry under ``key`` (the copy shipped over the interconnect
+        from the prefix's origin decoder).  Cache-only blocks — entry
+        references, never hard — so a replica competes with other cached
+        prefixes for space but never reduces admission headroom.  Returns
+        False (a no-op) when the blocks can't be found even after
+        reclaiming, or when a pinned/longer entry already holds the key."""
+        if not self.cfg.prefix_cache:
+            return False
+        bs = self.cfg.block_size
+        n = tokens // bs
+        if n <= 0:
+            return False
+        old = self.sessions.get(key)
+        if old is not None:
+            if old.pins > 0 or old.tokens >= n * bs:
+                old.last_use = t
+                return False
+            self._drop_entry(key)
+        while len(self.free) < n:
+            if not self._reclaim_one():
+                return False
+        ids = []
+        for _ in range(n):
+            b = self.free.pop()
+            self._incref(b)
+            ids.append(b)
+        self.sessions[key] = _CacheEntry(tuple(ids), n * bs, t)
+        return True
 
     def release(self, rid: int, sid: int, ctx_tokens: int, t: float):
         """Finish: free the reservation, leaving the prompt+output prefix
@@ -475,3 +585,25 @@ class KVAllocator:
             if e.tier == "dram")
         if self.dram_free + dram_held != self.cfg.n_dram:
             raise KVError("DRAM blocks leaked")
+        # ---- no-stale-pins invariant (the pin-leak audit): every pin
+        # references a tracked entry, every entry's pin count equals the
+        # pins actually referencing it, and the retired list holds exactly
+        # the dropped-but-still-pinned entries (storage already freed) ----
+        live = {id(e): e for e in self.sessions.values()}
+        retired = {id(e): e for e in self._retired}
+        pin_counts: Counter = Counter()
+        for rid, p in self.pins.items():
+            eid = id(p.entry)
+            if eid not in live and eid not in retired:
+                raise KVError(f"stale pin {rid}: entry neither live "
+                              f"nor retired")
+            pin_counts[eid] += 1
+        for eid, e in {**live, **retired}.items():
+            if e.pins != pin_counts.get(eid, 0):
+                raise KVError(f"entry pin-count drift: {e.pins} recorded, "
+                              f"{pin_counts.get(eid, 0)} actual")
+        for e in self._retired:
+            if e.pins <= 0:
+                raise KVError("retired entry with no pins")
+            if e.ids or e.dram_blocks:
+                raise KVError("retired entry still holds storage")

@@ -87,7 +87,10 @@ def build_traces(spec: ExperimentSpec) -> list[TraceRequest]:
         part = get_trace(route.trace, spec.duration, route.rps,
                          spec.seed + _ROUTE_SEED_STRIDE * i,
                          priority_mix=route.priority_mix,
-                         session_prob=route.session_prob)
+                         session_prob=route.session_prob,
+                         shared_prefix_prob=route.shared_prefix_prob,
+                         shared_prefix_len=route.shared_prefix_len,
+                         shared_prefix_count=route.shared_prefix_count)
         for r in part:
             r.model = route.model
         parts.append(part)
@@ -202,14 +205,21 @@ def run_policy(policy_name: str, trace_name: str = "mixed",
                hbm_frac: float = 0.9,
                offload_gb: Optional[float] = None,
                prefix_cache: bool = False,
-               prefill_chunking: int = 0) -> SimReport:
+               prefill_chunking: int = 0,
+               gateway: bool = False,
+               kv_alloc: str = "reserve",
+               shared_prefix_prob: float = 0.0,
+               shared_prefix_len: int = 512,
+               shared_prefix_count: int = 8) -> SimReport:
     """The classic single-pool experiment, desugared to a one-pool spec.
     Kept byte-stable with the pre-pool control plane (golden fixtures).
     The KV-tier knobs (``block_size``/``hbm_frac``/``offload_gb``/
-    ``prefix_cache``, sim.kvcache), the multi-turn ``session_prob``, and
-    the chunked-prefill/deflection knob ``prefill_chunking`` default to
-    the legacy flat-byte-counter, single-turn, wholesale-conversion
-    behavior."""
+    ``prefix_cache``, sim.kvcache), the multi-turn ``session_prob``, the
+    chunked-prefill/deflection knob ``prefill_chunking``, the locality
+    gateway (``gateway``/``kv_alloc``, core.gateway) and the Zipf shared-
+    prompt workload knobs (``shared_prefix_*``, sim.traces) default to
+    the legacy flat-byte-counter, single-turn, wholesale-conversion,
+    owner-steered behavior."""
     n_conv = n_convertible if policy_name == "tokenscale" else 0
     fleet_spec = single_pool_fleet(model, chip, tp, trace=trace_name,
                                    rps=rps, n_convertible=n_conv,
@@ -219,7 +229,12 @@ def run_policy(policy_name: str, trace_name: str = "mixed",
                                    hbm_frac=hbm_frac,
                                    offload_gb=offload_gb,
                                    prefix_cache=prefix_cache,
-                                   prefill_chunking=prefill_chunking)
+                                   prefill_chunking=prefill_chunking,
+                                   gateway=gateway,
+                                   kv_alloc=kv_alloc,
+                                   shared_prefix_prob=shared_prefix_prob,
+                                   shared_prefix_len=shared_prefix_len,
+                                   shared_prefix_count=shared_prefix_count)
     spec = ExperimentSpec(
         fleet=fleet_spec, policy=policy_name, engine=engine,
         preemption=preemption, duration=duration, seed=seed, dt=dt,

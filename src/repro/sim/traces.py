@@ -45,6 +45,12 @@ class TraceRequest:
     prefix_len: int = 0        # leading prompt tokens shared with the
                                # session's context (prior prompt + output) —
                                # what the KV prefix cache can reuse
+    shared_id: int = -1        # catalog id of the Zipf-popular system
+                               # prompt this request opens with (-1 = none);
+                               # set by assign_shared_prefixes
+    shared_len: int = 0        # leading prompt tokens covered by that
+                               # shared system prompt — reusable *across*
+                               # sessions (what the gateway hashtrie sees)
 
 
 @dataclass(frozen=True)
@@ -159,6 +165,48 @@ def assign_sessions(reqs: list[TraceRequest], session_prob: float,
     return reqs
 
 
+def assign_shared_prefixes(reqs: list[TraceRequest], prob: float,
+                           seed: int = 0, prefix_len: int = 512,
+                           n_prompts: int = 8,
+                           zipf_a: float = 1.2) -> list[TraceRequest]:
+    """Mark arrivals as opening with a Zipf-popular system prompt in place
+    — the cross-session prefix reuse today's per-session chains cannot
+    express (one hot system prompt shared by *many* conversations, the
+    workload the KV-locality gateway routes on).
+
+    A catalog of ``n_prompts`` system prompts is drawn once (lengths
+    around ``prefix_len``); each conversation opener (or sessionless
+    arrival) starts from catalog prompt ``k`` with probability ``prob``,
+    ``k`` Zipf-distributed with exponent ``zipf_a`` so a couple of
+    prompts dominate.  Follow-up turns inherit their opener's prompt (a
+    conversation keeps its system prompt).  Only ``shared_id`` /
+    ``shared_len`` are written, and the draw uses an *independent* RNG
+    stream (like ``assign_priorities`` / ``assign_sessions``), so adding
+    the knob never perturbs an existing seeded trace."""
+    if prob <= 0.0:
+        return reqs
+    rng = np.random.RandomState((seed + 2750159) % (2 ** 31))
+    lens = rng.randint(max(prefix_len // 2, 1),
+                       prefix_len + prefix_len // 2 + 1, size=n_prompts)
+    w = 1.0 / np.arange(1, n_prompts + 1) ** zipf_a
+    w /= w.sum()
+    by_session: dict[int, tuple[int, int]] = {}   # sid -> (pid, eff_len)
+    for r in sorted(reqs, key=lambda r: (r.t, r.rid)):
+        if r.session >= 0 and r.session in by_session:
+            pid, eff = by_session[r.session]      # follow-up: inherit
+        elif rng.uniform() < prob:
+            pid = int(rng.choice(n_prompts, p=w))
+            eff = int(lens[pid])
+        else:
+            pid, eff = -1, 0
+        if r.session >= 0 and r.session not in by_session:
+            by_session[r.session] = (pid, eff)
+        if pid >= 0:
+            r.shared_id = pid
+            r.shared_len = min(eff, r.in_len)
+    return reqs
+
+
 def burst_phases(spec: TraceSpec, duration_s: float,
                  rng) -> list[tuple[float, float, float]]:
     """The ON/OFF burst timeline as (start, end, rate-multiplier) phases.
@@ -178,7 +226,10 @@ def burst_phases(spec: TraceSpec, duration_s: float,
 def generate(spec: TraceSpec, duration_s: float, rps: float,
              seed: int = 0,
              priority_mix: dict[int, float] | None = None,
-             session_prob: float = 0.0
+             session_prob: float = 0.0,
+             shared_prefix_prob: float = 0.0,
+             shared_prefix_len: int = 512,
+             shared_prefix_count: int = 8
              ) -> list[TraceRequest]:
     """ON/OFF modulated Poisson arrivals with lognormal lengths."""
     rng = np.random.RandomState(seed)
@@ -202,12 +253,18 @@ def generate(spec: TraceSpec, duration_s: float, rps: float,
     reqs = [TraceRequest(i, float(times[i]), int(ins[i]), int(outs[i]))
             for i in range(n)]
     assign_priorities(reqs, priority_mix, seed)
-    return assign_sessions(reqs, session_prob, seed)
+    assign_sessions(reqs, session_prob, seed)
+    return assign_shared_prefixes(reqs, shared_prefix_prob, seed,
+                                  prefix_len=shared_prefix_len,
+                                  n_prompts=shared_prefix_count)
 
 
 def generate_mixed(duration_s: float, rps: float, seed: int = 0,
                    priority_mix: dict[int, float] | None = None,
-                   session_prob: float = 0.0
+                   session_prob: float = 0.0,
+                   shared_prefix_prob: float = 0.0,
+                   shared_prefix_len: int = 512,
+                   shared_prefix_count: int = 8
                    ) -> list[TraceRequest]:
     """The paper's Mixed trace: conv + code + BurstGPT 1/2 at equal rates."""
     parts = []
@@ -218,21 +275,30 @@ def generate_mixed(duration_s: float, rps: float, seed: int = 0,
     parts.sort(key=lambda r: r.t)
     for i, r in enumerate(parts):
         r.rid = i
-    # sessions are drawn over the merged arrival order (conversations are a
-    # property of the workload, not of one component trace)
-    return assign_sessions(parts, session_prob, seed)
+    # sessions (and shared prompts) are drawn over the merged arrival order
+    # (conversations are a property of the workload, not of one component
+    # trace)
+    assign_sessions(parts, session_prob, seed)
+    return assign_shared_prefixes(parts, shared_prefix_prob, seed,
+                                  prefix_len=shared_prefix_len,
+                                  n_prompts=shared_prefix_count)
 
 
 def get_trace(name: str, duration_s: float = 120.0, rps: float = 8.0,
               seed: int = 0,
               priority_mix: dict[int, float] | None = None,
-              session_prob: float = 0.0
+              session_prob: float = 0.0,
+              shared_prefix_prob: float = 0.0,
+              shared_prefix_len: int = 512,
+              shared_prefix_count: int = 8
               ) -> list[TraceRequest]:
+    kw = dict(priority_mix=priority_mix, session_prob=session_prob,
+              shared_prefix_prob=shared_prefix_prob,
+              shared_prefix_len=shared_prefix_len,
+              shared_prefix_count=shared_prefix_count)
     if name == "mixed":
-        return generate_mixed(duration_s, rps, seed, priority_mix,
-                              session_prob)
-    return generate(TRACES[name], duration_s, rps, seed, priority_mix,
-                    session_prob)
+        return generate_mixed(duration_s, rps, seed, **kw)
+    return generate(TRACES[name], duration_s, rps, seed, **kw)
 
 
 def stream_trace(name: str, duration_s: float, rps: float, seed: int = 0,
@@ -276,7 +342,10 @@ def varying_rate_trace(segments: list[tuple[float, float]],
                        spec: TraceSpec = TRACES["azure_conv"],
                        seed: int = 0,
                        priority_mix: dict[int, float] | None = None,
-                       session_prob: float = 0.0
+                       session_prob: float = 0.0,
+                       shared_prefix_prob: float = 0.0,
+                       shared_prefix_len: int = 512,
+                       shared_prefix_count: int = 8
                        ) -> list[TraceRequest]:
     """Piecewise-rate workload (large-scale load swings; used by the
     provisioned-vs-required correlation study, Fig. 11)."""
@@ -292,7 +361,10 @@ def varying_rate_trace(segments: list[tuple[float, float]],
     for i, r in enumerate(out):
         r.rid = i
     assign_priorities(out, priority_mix, seed)
-    return assign_sessions(out, session_prob, seed)
+    assign_sessions(out, session_prob, seed)
+    return assign_shared_prefixes(out, shared_prefix_prob, seed,
+                                  prefix_len=shared_prefix_len,
+                                  n_prompts=shared_prefix_count)
 
 
 def step_trace(duration_s: float, base_rps: float, burst_rps: float,
@@ -300,7 +372,10 @@ def step_trace(duration_s: float, base_rps: float, burst_rps: float,
                spec: TraceSpec = TRACES["azure_conv"],
                seed: int = 0,
                priority_mix: dict[int, float] | None = None,
-               session_prob: float = 0.0
+               session_prob: float = 0.0,
+               shared_prefix_prob: float = 0.0,
+               shared_prefix_len: int = 512,
+               shared_prefix_count: int = 8
                ) -> list[TraceRequest]:
     """Deterministic-rate step trace (Fig. 10: 1 -> 10 RPS at t=10 s)."""
     rng = np.random.RandomState(seed)
@@ -318,4 +393,7 @@ def step_trace(duration_s: float, base_rps: float, burst_rps: float,
         reqs.append(TraceRequest(rid, t, in_len, out_len))
         rid += 1
     assign_priorities(reqs, priority_mix, seed)
-    return assign_sessions(reqs, session_prob, seed)
+    assign_sessions(reqs, session_prob, seed)
+    return assign_shared_prefixes(reqs, shared_prefix_prob, seed,
+                                  prefix_len=shared_prefix_len,
+                                  n_prompts=shared_prefix_count)

@@ -152,6 +152,30 @@ def test_swap_out_roundtrip_and_tier_full_fallback():
     assert stats.swap_outs == 2
 
 
+def test_pinned_entry_replaced_by_longer_release_leaves_no_stale_pin():
+    """Regression for the requeue-once pin-leak hazard: a request pins a
+    session entry (the penalty path), then the session owner finishes and
+    re-caches a *longer* context under the same sid — dropping the pinned
+    entry.  The retired-entry bookkeeping must keep the pin accounted
+    (``check()``'s no-stale-pins invariant) until unpin drains it."""
+    kv = make_alloc(n_hbm=16, n_dram=0)
+    kv.admit(1, 16.0)
+    kv.release(1, sid=0, ctx_tokens=16, t=1.0)       # 4-block entry
+    kv.pin(2, 0, 16, t=2.0)                          # requeued arrival
+    kv.admit(3, 24.0)
+    kv.release(3, sid=0, ctx_tokens=24, t=3.0)       # replaces while pinned
+    kv.check()                                       # no stale pin
+    assert len(kv._retired) == 1
+    assert kv.lookup(0, 64) == (24, "hbm")           # new entry serves
+    kv.unpin(2)                                      # drains the retiree
+    kv.check()
+    assert not kv._retired
+    while kv._reclaim_one():
+        kv.check()
+    assert len(kv.free) == kv.cfg.n_hbm              # nothing leaked
+    assert not kv.ref and not kv.hard
+
+
 # ---------------------------------------------------------------------------
 # block conservation: seeded random-ops fuzz with the double-entry audit
 # ---------------------------------------------------------------------------
