@@ -226,6 +226,46 @@ def smoke(budget: float) -> int:
     return 0
 
 
+def guard(tolerance: float = 0.03, runs: int = 3,
+          update: bool = False) -> int:
+    """Trace-off overhead gate (scripts/check.sh): rerun the tails-replay
+    smoke cells (22 s, telemetry off — the flight-recorder hooks cost one
+    ``obs is None`` test each) and fail if wall time regresses more than
+    ``tolerance`` vs the ``tails_replay_smoke`` row in BENCH_sim.json.
+    Best-of-``runs`` damps scheduler noise; ``--update`` records a fresh
+    baseline instead of comparing."""
+    best = None
+    for _ in range(runs):
+        row = run_tails_replay(duration=22.0)
+        if best is None or row["wall_s"] < best["wall_s"]:
+            best = row
+    print(f"obs-guard,wall_s,{best['wall_s']}")
+    print(f"obs-guard,requests,{best['requests']}")
+    data = load_bench()
+    if update:
+        data.setdefault("current", {})["tails_replay_smoke"] = {
+            "wall_s": best["wall_s"], "requests": best["requests"]}
+        save_bench(data)
+        return 0
+    base = data.get("current", {}).get("tails_replay_smoke", {}) \
+        .get("wall_s")
+    if not isinstance(base, (int, float)):
+        print("obs-guard,FAIL,no tails_replay_smoke baseline in "
+              "BENCH_sim.json (record one with --guard --update)",
+              file=sys.stderr)
+        return 1
+    ratio = best["wall_s"] / max(base, 1e-9)
+    print(f"obs-guard,baseline_s,{base}")
+    print(f"obs-guard,ratio,{ratio:.3f}")
+    if ratio > 1.0 + tolerance:
+        print(f"obs-guard,FAIL,wall {best['wall_s']}s is {ratio:.2f}x the "
+              f"recorded {base}s (tolerance {tolerance:.0%})",
+              file=sys.stderr)
+        return 1
+    print(f"obs-guard,ok,within {tolerance:.0%} of baseline")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="benchmarks.perf", description=__doc__,
                                  formatter_class=argparse
@@ -241,7 +281,16 @@ def main(argv=None) -> int:
                          "assertion; exits nonzero over budget")
     ap.add_argument("--budget", type=float, default=12.0,
                     help="--smoke wall-clock budget in seconds")
+    ap.add_argument("--guard", action="store_true",
+                    help="trace-off overhead gate: rerun the tails-replay "
+                         "smoke and fail if wall time regresses >3% vs "
+                         "BENCH_sim.json's tails_replay_smoke row "
+                         "(with --update: record a fresh baseline)")
+    ap.add_argument("--tolerance", type=float, default=0.03,
+                    help="--guard regression tolerance (fraction)")
     args = ap.parse_args(argv)
+    if args.guard:
+        return guard(args.tolerance, update=args.update)
     if args.smoke:
         return smoke(args.budget)
     names = args.scenario or sorted(SCENARIOS)

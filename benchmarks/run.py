@@ -44,6 +44,18 @@ ROWS: list[str] = []
 # the whole harness to the discrete-event simulator (DESIGN.md)
 ENGINE = "fluid"
 
+# flight-recorder output base path (--trace-out=PATH); when set, the obs
+# bench and --spec runs attach a recorder and write JSONL (+ Chrome-trace
+# JSON) traces next to it.  None = telemetry off everywhere (default).
+TRACE_OUT = None
+
+
+def _trace_paths(tag: str) -> tuple[str, str]:
+    """Derive per-run trace paths from --trace-out: base-<tag>.jsonl plus
+    the Perfetto-loadable base-<tag>.chrome.json."""
+    base, ext = os.path.splitext(TRACE_OUT)
+    return (f"{base}-{tag}{ext or '.jsonl'}", f"{base}-{tag}.chrome.json")
+
 
 def emit(bench: str, metric: str, value):
     if isinstance(value, float):
@@ -871,13 +883,64 @@ def perfscale():
         emit("perfscale", f"stream_smoke,{k}", v)
 
 
+def obs():
+    """Flight-recorder end-to-end row (scripts/check.sh): replay the
+    deflect burst cell with telemetry on through *both* engines, write
+    JSONL + Chrome-trace JSON (to --trace-out, or the system temp dir),
+    schema-validate the JSONL, and run the scaling-decision explainer —
+    the full record -> export -> explain pipeline in one bench."""
+    import tempfile
+    from repro.obs.explain import explain
+    from repro.obs.export import (load_jsonl, validate_trace_lines,
+                                  write_chrome_trace, write_jsonl)
+    global TRACE_OUT
+    if TRACE_OUT is None:
+        TRACE_OUT = os.path.join(tempfile.gettempdir(), "obs_trace.jsonl")
+    cfg = dict(DEFLECT_CFG)
+    cfg["duration"] = 20.0
+    for eng in ["fluid", "events"]:
+        rep = run_policy("tokenscale", "burstgpt1", engine=eng,
+                         prefill_chunking=DEFLECT_VARIANTS["chunked"],
+                         telemetry=True, **cfg)
+        rec = rep.obs
+        jsonl_path, chrome_path = _trace_paths(eng)
+        n_lines = write_jsonl(rec, jsonl_path)
+        write_chrome_trace(rec, chrome_path)
+        records = load_jsonl(jsonl_path)
+        errors = validate_trace_lines(records)
+        report = explain(records)
+        emit("obs", f"{eng},requests", len(rec.requests))
+        emit("obs", f"{eng},trace_lines", n_lines)
+        emit("obs", f"{eng},schema_errors", len(errors))
+        emit("obs", f"{eng},decisions", report["n_decisions"])
+        emit("obs", f"{eng},scale_ups", len(report["scale_ups"]))
+        emit("obs", f"{eng},ttft_violations", len(report["violations"]))
+        for stage, n in sorted(report["violations_by_stage"].items()):
+            emit("obs", f"{eng},violations_{stage}", n)
+        for e in errors:
+            print(f"# obs schema error ({eng}): {e}", file=sys.stderr)
+        if errors:
+            sys.exit(f"obs bench: {len(errors)} schema errors in "
+                     f"{jsonl_path}")
+
+
 def run_spec_files(paths: list[str]):
     """Run declarative ExperimentSpec JSON files (--spec=...) and emit
-    their summary + per-model rows."""
+    their summary + per-model rows.  With --trace-out, each spec runs
+    with telemetry forced on and writes its flight-recorder trace."""
+    import dataclasses
     for path in paths:
         spec = ExperimentSpec.load(path)
+        if TRACE_OUT is not None:
+            spec = dataclasses.replace(spec, telemetry=True)
         rep = run_spec(spec)
         tag = os.path.splitext(os.path.basename(path))[0]
+        if TRACE_OUT is not None and rep.obs is not None:
+            from repro.obs.export import write_chrome_trace, write_jsonl
+            jsonl_path, chrome_path = _trace_paths(tag)
+            emit("spec", f"{tag},trace_lines",
+                 write_jsonl(rep.obs, jsonl_path))
+            write_chrome_trace(rep.obs, chrome_path)
         for k, v in rep.summary().items():
             emit("spec", f"{tag},{k}", v)
         models = rep.models()
@@ -912,6 +975,7 @@ BENCHES = {
     "pareto": pareto,
     "hetero": hetero,
     "perfscale": perfscale,
+    "obs": obs,
     "smoke": smoke,
 }
 
@@ -933,14 +997,20 @@ def parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--spec", action="append", default=[], metavar="JSON",
                     help="run a declarative ExperimentSpec JSON file "
                          "(may repeat); skips the default all-bench run")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="flight-recorder output base path: the obs bench "
+                         "and --spec runs record telemetry and write "
+                         "PATH-<tag>.jsonl + PATH-<tag>.chrome.json "
+                         "(repro.obs; default: telemetry off)")
     return ap.parse_args(argv)
 
 
 def main(argv=None) -> None:
-    global ENGINE
+    global ENGINE, TRACE_OUT
     args = parse_args(argv)
     get_engine(args.engine)         # fail fast on unknown engine names
     ENGINE = args.engine
+    TRACE_OUT = args.trace_out
     names = list(args.benches)
     for group in args.bench:
         names += [n for n in group.split(",") if n]

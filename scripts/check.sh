@@ -28,4 +28,13 @@ python scripts/regen_golden.py --check
 echo "== perfscale smoke (wall-clock budget gate; see benchmarks/perf.py) =="
 python -m benchmarks.perf --smoke --budget 12.0
 
+echo "== obs smoke (flight recorder: record + schema-validate + explain a burst trace on both engines) =="
+obs_tmp="$(mktemp -d)"
+trap 'rm -rf "$obs_tmp"' EXIT
+python -m benchmarks.run --bench=obs --trace-out="$obs_tmp/trace.jsonl"
+python -m repro.obs "$obs_tmp/trace-events.jsonl" --validate > /dev/null
+
+echo "== obs overhead guard (telemetry-off tails replay within 3% of BENCH_sim.json) =="
+python -m benchmarks.perf --guard
+
 echo "OK: all checks passed"

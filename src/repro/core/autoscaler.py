@@ -59,6 +59,12 @@ class ScaleDecision:
 
 class Policy:
     name = "base"
+    #: Eq. 2-4 intermediates of the most recent ``decide`` call, for the
+    #: flight recorder's decision log (obs.explain).  Policies that don't
+    #: expose their arithmetic leave it None; the recorder degrades to
+    #: plan-only records.
+    last_debug: Optional[dict] = None
+
     def decide(self, obs: Observation) -> ScaleDecision:  # pragma: no cover
         raise NotImplementedError
 
@@ -117,17 +123,35 @@ class TokenScalePolicy(Policy):
         # off deflected_rate is 0.0 and this is the historical expression)
         v_eff = min(self.prof.v_prefill, self.prof.v_network)
         rate = max(obs.token_rate_in - obs.deflected_rate, 0.0)
-        i_p = math.ceil(rate / max(v_eff, 1e-9))
+        i_p_raw = math.ceil(rate / max(v_eff, 1e-9))
         # Eq. (3): decoders summed per bucket, at the decode pool's velocity
         i_d_f = sum(rate / max(self.dprof.v_decode.get(b, 1e9), 1e-9)
                     for b, rate in obs.token_rate_by_bucket.items())
         i_d = math.ceil(i_d_f)
         # Eq. (4): regular decoders net of the fixed convertible pool
-        i_d_reg = max(i_d - self.convertible, 0)
-        i_p = max(i_p, self.min_p)
-        i_d_reg = max(i_d_reg, self.min_d)
+        i_d_reg_raw = max(i_d - self.convertible, 0)
+        i_p = max(i_p_raw, self.min_p)
+        i_d_reg = max(i_d_reg_raw, self.min_d)
         i_p = self.hyst.apply("p", obs.cur_prefillers, i_p, obs.t)
         i_d_reg = self.hyst.apply("d", obs.cur_decoders, i_d_reg, obs.t)
+        # flight-recorder breadcrumb: the full Eq. 2-4 arithmetic of this
+        # interval, read (never fed back) by obs.explain via
+        # ``FlightRecorder.on_plan``
+        self.last_debug = {
+            "policy": self.name,
+            "eq2": {"token_rate_in": obs.token_rate_in,
+                    "deflected_rate": obs.deflected_rate, "rate": rate,
+                    "v_prefill": self.prof.v_prefill,
+                    "v_network": self.prof.v_network, "v_eff": v_eff,
+                    "i_p": i_p_raw},
+            "eq3": {"rate_by_bucket": dict(obs.token_rate_by_bucket),
+                    "v_decode": dict(self.dprof.v_decode), "i_d": i_d},
+            "eq4": {"convertible": self.convertible,
+                    "i_d_regular": i_d_reg_raw},
+            "final": {"prefillers": i_p, "decoders": i_d_reg,
+                      "cur_prefillers": obs.cur_prefillers,
+                      "cur_decoders": obs.cur_decoders},
+        }
         return ScaleDecision(i_p, i_d_reg)
 
 

@@ -286,6 +286,11 @@ class ExperimentSpec:
     # length stays bounded — see ClusterBase._snapshot_every)
     snapshot_interval: Optional[float] = None
     policy_options: dict = field(default_factory=dict)
+    # attach a flight recorder (repro.obs) to the run: per-request span
+    # tracing + metrics registry + scaling-decision log on the resulting
+    # SimReport.obs.  Off by default — the engines' telemetry hooks are
+    # no-ops and the run is byte-identical to a pre-telemetry build.
+    telemetry: bool = False
 
     # ---- JSON round trip -------------------------------------------------
     def to_dict(self) -> dict:
@@ -295,6 +300,9 @@ class ExperimentSpec:
             # identical to the pre-knob schema (the hetero golden records
             # a spec dict and must reproduce byte-for-byte)
             d.pop("snapshot_interval")
+        if not d.get("telemetry"):
+            # same schema-stability rule for the telemetry knob
+            d.pop("telemetry", None)
         for p in d["fleet"]["pools"]:
             # same schema-stability rule for the chunking knob: pools that
             # keep the legacy wholesale-conversion default serialize
@@ -453,6 +461,11 @@ def flat_observation(model: str, obs: FleetObservation) -> Observation:
 class FleetPolicy:
     """Pool-centric policy interface: one ``FleetPlan`` per interval."""
     name = "fleet-base"
+    #: per-model Eq. 2-4 intermediates of the most recent ``plan`` call
+    #: ({"models": {model: {...}}}), read by the flight recorder's
+    #: decision log (obs.explain); None when the planner doesn't expose
+    #: its arithmetic.
+    last_debug: Optional[dict] = None
 
     def plan(self, obs: FleetObservation) -> FleetPlan:  # pragma: no cover
         raise NotImplementedError
@@ -484,6 +497,7 @@ class PerModelFleetPolicy(FleetPolicy):
 
     def plan(self, obs: FleetObservation) -> FleetPlan:
         plan = FleetPlan()
+        debug: dict = {}
         for model, pol in self.policies.items():
             dec: ScaleDecision = pol.decide(flat_observation(model, obs))
             (pre_pool,) = obs.pools_of(model, "prefill")
@@ -492,6 +506,11 @@ class PerModelFleetPolicy(FleetPolicy):
             plan.targets[dec_pool.name] = dec.decoders
             if dec.live:
                 plan.live |= {pre_pool.name, dec_pool.name}
+            if pol.last_debug is not None:
+                gw = obs.gateway.get(model)
+                debug[model] = dict(pol.last_debug,
+                                    burst=gw.burst if gw else False)
+        self.last_debug = {"models": debug} if debug else None
         return plan
 
 
@@ -673,6 +692,7 @@ class CoordinatedTokenScalePolicy(FleetPolicy):
     # ---- the plan -----------------------------------------------------
     def plan(self, obs: FleetObservation) -> FleetPlan:
         plan = FleetPlan()
+        debug: dict = {}
         for m in self.fleet.models():
             by_role = {r: [p for p in self.fleet.pools_of(m) if p.role == r]
                        for r in ROLES}
@@ -690,17 +710,40 @@ class CoordinatedTokenScalePolicy(FleetPolicy):
             # its *current* size (loans included) before regular pools
             rem = dict(gw.token_rate_by_bucket)
             conv = by_role["convertible"]
+            conv_dbg = {"convertible": 0, "absorbed_frac": 0.0}
             if conv and rem:
                 snap = obs.pools.get(conv[0].name)
                 n_conv = snap.count if snap is not None else conv[0].init
                 cprof = self.profiles[conv[0].name]
                 need = self._decode_need(cprof, rem)
+                conv_dbg["convertible"] = n_conv
                 if need > 0.0:
                     f = min(n_conv / need, 1.0)
+                    conv_dbg["absorbed_frac"] = f
                     for b in rem:
                         rem[b] *= (1.0 - f)
             self._apportion_decode(plan, obs, by_role["decode"], rem,
                                    gw.burst)
+            # flight-recorder breadcrumb (pool-set Eq. 2-4 inputs + the
+            # cost ranking that ordered the apportionment), read by
+            # obs.explain via ``FlightRecorder.on_plan``
+            debug[m] = {
+                "policy": self.name, "burst": gw.burst,
+                "eq2": {"token_rate_in": gw.token_rate_in,
+                        "deflected_rate": deflected, "rate": rate,
+                        "headroom": self.headroom},
+                "eq3": {"rate_by_bucket": dict(gw.token_rate_by_bucket)},
+                "eq4": conv_dbg,
+                "prefill_rank": [
+                    (p.name, prefill_tokens_per_dollar(self.profiles[p.name]))
+                    for p in self._rank(by_role["prefill"],
+                                        prefill_tokens_per_dollar)],
+                "decode_rank": [
+                    (p.name, decode_tokens_per_dollar(self.profiles[p.name]))
+                    for p in self._rank(by_role["decode"],
+                                        decode_tokens_per_dollar)],
+            }
+        self.last_debug = {"models": debug}
         # drain-based scale-down for every pool this planner owns
         plan.drain = set(plan.targets)
         if self.spill:

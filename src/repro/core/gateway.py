@@ -332,6 +332,10 @@ class Gateway:
         self.block_size = block_size
         self.stats = stats or RoutingStats()
         self.trie = PrefixHashTrie(cfg.max_nodes)
+        # flight-recorder tap (repro.obs): hook(t, kind, **fields) for
+        # replication-lifecycle events; None (default) = telemetry off,
+        # one attribute test on the replication-planning path only.
+        self.trace_hook = None
 
     # ---- chain plumbing ----------------------------------------------
     def chain_of(self, src) -> list[tuple]:
@@ -412,4 +416,9 @@ class Gateway:
                 source=src, target=tgt, node=node))
         if jobs:
             node.pending = True
+            if self.trace_hook is not None:
+                self.trace_hook(
+                    t, "planned", tokens=node.depth, copies=len(jobs),
+                    source=getattr(src, "iid", None),
+                    targets=[getattr(j.target, "iid", None) for j in jobs])
         return jobs

@@ -155,6 +155,12 @@ class Router:
 
     def __init__(self, burst_detector: Optional[BurstDetector] = None):
         self.burst = burst_detector or BurstDetector()
+        # flight-recorder tap (repro.obs): when set, every route_prefill
+        # outcome is reported as hook(t, kind, target, in_len, priority,
+        # slo).  None (the default) keeps the hot path decision-free
+        # beyond one attribute test — telemetry-off runs are byte- and
+        # order-identical.
+        self.trace_hook = None
 
     # ---- Alg. 1 ------------------------------------------------------
     def route_prefill(self, in_len: int, prefillers: list,
@@ -184,6 +190,17 @@ class Router:
         the SLO.  Decoders with no TPOT headroom advertise zero velocity
         and are never chosen, so deflection cannot form on an overloaded
         decode pool."""
+        out = self._route_prefill(in_len, prefillers, convertibles,
+                                  priority, deflectables)
+        hook = self.trace_hook
+        if hook is not None:
+            hook(now, out[1], out[0], in_len, priority,
+                 ttft_slo(in_len, priority))
+        return out
+
+    def _route_prefill(self, in_len: int, prefillers: list,
+                       convertibles: list, priority: int,
+                       deflectables: list = ()):
         slo = ttft_slo(in_len, priority)
         for p in _by_velocity(prefillers):        # round 1 (lines 1-7)
             wait = p.inflight_tokens() / max(p.prefill_velocity(), 1e-9)

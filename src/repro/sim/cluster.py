@@ -55,6 +55,12 @@ class Cluster(ClusterBase):
         # the fleet only changes inside _scale, so the per-tick GPU count
         # is a cached constant between scale executions
         gpus = self._gpu_count(t)
+        if self.obs is not None:
+            # trace consumers need the tick granularity to interpret
+            # fluid timestamps: arrivals are batched and completions
+            # quantized to dt, unlike the event engine's exact stamps
+            self.obs.meta.setdefault("dt", self.dt)
+            self.obs.meta.setdefault("duration", t_end)
         while t < t_end:
             # ---- arrivals ----
             while ti < len(trace) and trace[ti].t <= t:

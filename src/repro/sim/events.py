@@ -103,6 +103,8 @@ class EventCluster(ClusterBase):
         arrivals = iter(trace)
         nxt = next(arrivals, None)
         self._snap_every = self._snapshot_every(t_end)
+        if self.obs is not None:
+            self.obs.meta.setdefault("duration", t_end)
         self._push(0.0, "scale")
         self._push(0.0, "snapshot")
         t_cur = 0.0
@@ -246,6 +248,10 @@ class EventCluster(ClusterBase):
             # one whole token per granted request: keeps the decoder's
             # exact-integer context sum in step with the batch
             d._ctx_sum += granted
+            if self.obs is not None:
+                # exact decode-token odometer (the fluid engine's
+                # counterpart is the Decoder.tick pre-pass)
+                self.obs.decode_tokens_done += granted
         if finished:
             d.active = [r for r in d.active if r.t_finish < 0]
             for r in finished:
@@ -259,6 +265,10 @@ class EventCluster(ClusterBase):
             chunk = d._iter_chunk
             d._iter_chunk = 0.0
             if chunk > 0 and d.prefill_q:
+                if self.obs is not None:
+                    # exact chunk boundary: this iteration advanced the
+                    # co-scheduled prompt queue by precisely ``chunk``
+                    self.obs.on_chunk(t, d, chunk)
                 d.advance_prefill(chunk, t)
         elif d.is_convertible and d.prefill_q and d.conv:
             # legacy wholesale conversion (Eq. 5 restricted rate)

@@ -226,6 +226,11 @@ class Instance:
         # self.convertibles`` list-concat membership probes on the event
         # hot path (O(pools + instances) per event) with an O(1) flag.
         self.live = True
+        # flight recorder (repro.obs.FlightRecorder) or None = telemetry
+        # off.  Set by ClusterBase._spawn / attach_obs; the tick paths
+        # only ever test it for None, so disabled telemetry costs one
+        # attribute test and cannot perturb float math or event order.
+        self.obs = None
 
     def ready(self, t: float) -> bool:
         return t >= self.ready_t
@@ -548,6 +553,10 @@ class Decoder(Instance):
                 req.t_prefill_end = t
                 req.t_kv_ready = t        # on-box: no KVC transfer
                 done.append(req)
+                if self.obs is not None:
+                    # on-box prefill completion odometer (prefiller-side
+                    # completions are counted in ClusterBase._to_network)
+                    self.obs.prefill_tokens_done += req.prefill_tokens
                 if self.kv is not None and not self.can_admit(req):
                     self.kv_spill.append((t, req))
                 else:
@@ -774,6 +783,13 @@ class Decoder(Instance):
             return finished
         rate = dt / it                     # tokens per request this tick
         b = len(self.active)
+        if self.obs is not None and rate > 0:
+            # decode-token odometer: read-only pre-pass over the residents
+            # *before* the grant loop mutates ``generated`` — telemetry-on
+            # only, so the default path pays one attribute test per tick
+            self.obs.decode_tokens_done += sum(
+                min(rate, max(r.src.out_len - r.generated, 0.0))
+                for r in self.active)
         self._invalidate()                 # every resident's length moves
         self._ctx_exact = False            # fluid grants fractional tokens
         if b >= self._VEC_MIN_BATCH:
@@ -992,6 +1008,10 @@ class SimReport:
     # and its per-pool breakdown; the --bench=pareto cost axis
     cost_dollars: float = 0.0
     pool_cost: dict = field(default_factory=dict)
+    # flight recorder (repro.obs.FlightRecorder) carrying the run's span
+    # trace / metrics samples / decision log; None unless the run was
+    # built with ExperimentSpec.telemetry on
+    obs: Optional[object] = None
 
     # ---- SLO metrics (§V) ----
     # Every metric optionally restricts to one priority class and/or one
@@ -1117,11 +1137,19 @@ class SimReport:
             "ttft_mean": self.mean("ttft"),
             "tpot_mean": self.mean("tpot"),
             "ttft_p99": self.percentile("ttft", 99),
+            "tpot_p99": self.percentile("tpot", 99),
+            "ttft_p999": self.percentile("ttft", 99.9),
         }
 
     def class_summary(self, priority: int) -> dict:
+        n = len(self._pool(priority))
+        if n == 0:
+            # stable zero-valued schema for absent classes instead of
+            # NaN percentiles (the *_summary degradation contract)
+            return {"n": 0, "slo_attainment": 0.0,
+                    "ttft_p99": 0.0, "tpot_p99": 0.0}
         return {
-            "n": len(self._pool(priority)),
+            "n": n,
             "slo_attainment": self.slo_attainment(priority),
             "ttft_p99": self.percentile("ttft", 99, priority=priority),
             "tpot_p99": self.percentile("tpot", 99, priority=priority),
@@ -1131,8 +1159,15 @@ class SimReport:
         """Per-model SLO accounting for multi-model fleets (same schema
         contract as ``summary``/``class_summary``: goldens and their
         regenerator share it)."""
+        n = len(self._pool(model=model))
+        if n == 0:
+            # stable zero-valued schema for unknown models (see
+            # class_summary)
+            return {"n": 0, "slo_attainment": 0.0, "ttft_attainment": 0.0,
+                    "tpot_attainment": 0.0, "throughput": 0.0,
+                    "ttft_p99": 0.0}
         return {
-            "n": len(self._pool(model=model)),
+            "n": n,
             "slo_attainment": self.slo_attainment(model=model),
             "ttft_attainment": self.ttft_attainment(model=model),
             "tpot_attainment": self.tpot_attainment(model=model),
@@ -1144,9 +1179,15 @@ class SimReport:
         """KV-tier metrics (prefix hit rate, offload bytes, swap stalls,
         blocks-in-use watermarks) plus the preempted-request tail slice —
         the schema the ``kvtiers`` golden and its regenerator share.
-        Empty when the fleet runs the legacy flat byte counter."""
+        When the fleet runs the legacy flat byte counter the same key
+        set comes back zero-valued (the *_summary degradation contract:
+        stable schema, no empty-dict/KeyError special cases)."""
         if not self.kv:
-            return {}
+            out = KVStats().summary()
+            out["n_preempted"] = 0
+            out["preempted_ttft_p99"] = 0.0
+            out["preempted_tpot_p99"] = 0.0
+            return out
         out = dict(self.kv)
         out["n_preempted"] = len(self._pool(preempted=True))
         out["preempted_ttft_p99"] = self.percentile("ttft", 99,
@@ -1159,8 +1200,11 @@ class SimReport:
         """Gateway metrics: routing-decision breakdown (affinity hit /
         replica hit / load-balanced fallback), replication traffic, and
         lazy-paging counters — the schema the ``gateway_locality`` golden
-        and its regenerator share.  Empty when no pool enables the
-        gateway or lazy paging."""
+        and its regenerator share.  When no pool enables the gateway or
+        lazy paging the same key set comes back zero-valued (see
+        ``kv_summary``)."""
+        if not self.gw:
+            return RoutingStats().summary()
         return dict(self.gw)
 
 
@@ -1256,6 +1300,12 @@ class ClusterBase:
                                     gpools[0].spec.block_size,
                                     self.gw_stats)
                 self._gw_on = True
+        # flight recorder (repro.obs): None = telemetry off.  Every hook
+        # below is guarded by ``self.obs is not None`` and the recorder
+        # is a pure observer, so the disabled path is byte-identical and
+        # the enabled path cannot perturb event ordering.  Set before the
+        # initial spawns so ``_spawn`` can propagate it unconditionally.
+        self.obs = None
         self._iid = 0
         for pool in self.pools.values():     # declaration order = iid order
             for _ in range(pool.spec.init):
@@ -1290,6 +1340,23 @@ class ClusterBase:
         # rolling 1-s gateway counters (deque: the 5 s window expires from
         # the left instead of rebuilding the list on every arrival)
         self._arrivals: deque[tuple[float, SimRequest]] = deque()
+
+    # ---- flight-recorder attachment (repro.obs) ----------------------
+    def attach_obs(self, rec):
+        """Attach a ``FlightRecorder`` to this run (idempotent per
+        recorder).  Wires the per-group router/gateway trace hooks and
+        propagates the recorder to already-spawned instances; instances
+        spawned later inherit it via ``_spawn``."""
+        self.obs = rec
+        rec.engine = self.engine
+        for g in self.fleet.groups.values():
+            g.router.trace_hook = rec.router_hook(g.model)
+            if g.gateway is not None:
+                g.gateway.trace_hook = rec.gateway_hook(g.model)
+        for pool in self.pools.values():
+            for i in pool.instances:
+                i.obs = rec
+        return rec
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -1326,6 +1393,7 @@ class ClusterBase:
             if pool.spec.gateway:
                 i.gateway = self.fleet.groups[pool.spec.model].gateway
         i.pool = pool
+        i.obs = self.obs
         return i
 
     def _make_allocator(self, pool: Pool, d: Decoder) -> KVAllocator:
@@ -1408,6 +1476,10 @@ class ClusterBase:
         the convertible on-box path (``Decoder.submit_prefill``): chunks
         execute inside the target's decode iterations and the finished
         prompt admits without a KVC transfer."""
+        if self.obs is not None:
+            self.obs.on_routed(req, t, kind, tgt)
+            if kind == "deflect":
+                self.obs.on_deflect(req, t, tgt)
         if kind == "prefiller":
             tgt.submit(req, t)
         else:
@@ -1434,6 +1506,8 @@ class ClusterBase:
                            TokenScalePolicy)
         convs = g.conv_instances()
         burst = is_ts and convs and g.router.burst.is_burst(t)
+        if self.obs is not None:
+            self.obs.on_arrival(req, t, burst=bool(burst))
         if burst:
             # burst traffic goes straight to the Convertible Decoders (§IV-A)
             tgt, kind = g.router.route_prefill(
@@ -1451,6 +1525,8 @@ class ClusterBase:
             self._submit_prefill_work(tgt, kind, req, t)
         else:
             # Alg.1 line 15: central queue, re-evaluated as load changes
+            if self.obs is not None:
+                self.obs.on_routed(req, t, None, None)
             self._wait_add(req)
 
     def _ready(self, insts, t: float):
@@ -1623,6 +1699,11 @@ class ClusterBase:
         job.t_done = t + stall
         job.gw = gw
         gw.stats.replica_stall_s += stall
+        if self.obs is not None:
+            self.obs.on_replication(
+                t, "dispatch", tokens=job.tokens, stall=stall,
+                source=getattr(src, "iid", None),
+                target=getattr(job.target, "iid", None))
         insort(self._gw_jobs, job, key=lambda j: j.t_done)
         self._on_replication(job)
 
@@ -1652,6 +1733,11 @@ class ClusterBase:
                                replica=True)
                 gw.stats.replications += 1
                 gw.stats.replica_bytes += tgt.kv.token_bytes(job.tokens)
+                if self.obs is not None:
+                    self.obs.on_replication(
+                        t, "done", tokens=job.tokens,
+                        source=getattr(src, "iid", None),
+                        target=getattr(tgt, "iid", None))
         for pool in self.pools.values():
             if pool.spec.kv_alloc != "lazy":
                 continue
@@ -1674,6 +1760,8 @@ class ClusterBase:
                 continue
             if d.kv.try_grow(r.src.rid, d._admit_bytes(r)) is not None:
                 continue
+            if self.obs is not None:
+                self.obs.on_oom(r, t, d)
             victims = self._victim_order(
                 [v for v in d.active
                  if v is not r and v.t_finish < 0
@@ -1703,6 +1791,11 @@ class ClusterBase:
         # blocks already live on the decode side)
         delay = hw.kvc_transfer_time(pool.cfg, pool.inst,
                                      req.src.in_len - req.kv_hit_tokens)
+        if self.obs is not None:
+            # prefiller-side completion odometer + the transfer event
+            # (on-box completions are counted in Decoder.advance_prefill)
+            self.obs.prefill_tokens_done += req.prefill_tokens
+            self.obs.on_transfer(req, t, delay)
         entry = (t + delay, req)
         self._pending_add(entry)
         return entry
@@ -1981,6 +2074,11 @@ class ClusterBase:
         else:                                # KV dropped, full recompute
             delay = recompute
         victim.decode_time += delay
+        if self.obs is not None:
+            swapped = self.preemption.mode == "pause-requeue" and (
+                d.kv is None or victim.kv_swap is not None)
+            self.obs.on_preempt(victim, t, d,
+                                "swap" if swapped else "recompute", delay)
         self.preemption_log.append(
             (t, victim.priority, preemptor.priority, victim.generated))
         entry = (t + delay, victim)
@@ -2058,6 +2156,10 @@ class ClusterBase:
         respect the pool's ``min`` floor."""
         obs = self._fleet_observation(t)
         plan = self.policy.plan(obs)
+        if self.obs is not None:
+            # decision log: observation + plan + the policy's Eq. 2-4
+            # intermediates, before execution mutates the fleet
+            self.obs.on_plan(t, obs, plan, self.policy.last_debug)
         # fleet membership changes only below: settle the cost integral
         # over the closing constant segment first
         self._cost_advance(t)
@@ -2116,6 +2218,8 @@ class ClusterBase:
                 victims += busy[:excess - len(victims)]
             for i in victims:
                 i.draining = True
+                if self.obs is not None:
+                    self.obs.on_drain(t, pool.spec.name, i)
 
     def _execute_spill(self, src: str, dst: str, n: int, t: float):
         """Move up to ``n`` idle instances from convertible pool ``src``
@@ -2127,10 +2231,13 @@ class ClusterBase:
             return
         movable = [i for i in sp.instances
                    if i.ready(t) and i.idle and not i.draining]
-        for i in movable[:n]:
+        moved = movable[:n]
+        for i in moved:
             i.live = False
             sp.instances.remove(i)
             dp.instances.append(self._spawn(dp, t + dp.inst.chip.startup_s))
+        if moved and self.obs is not None:
+            self.obs.on_spill(t, src, dst, len(moved))
 
     def _cost_advance(self, t: float):
         """Advance the dollar-billing integral to ``t``.  Exact because
@@ -2188,7 +2295,7 @@ class ClusterBase:
 
     def _snapshot(self, t: float) -> dict:
         prefillers, decoders = self.prefillers, self.decoders
-        return {
+        snap = {
             "t": t,
             "prefillers": len(prefillers),
             "decoders": len(decoders),
@@ -2201,11 +2308,19 @@ class ClusterBase:
             "pools": {name: len(pool.instances)
                       for name, pool in self.pools.items()},
         }
+        if self.obs is not None:
+            # samples the metrics registry on the timeline cadence and
+            # adds one additive "obs" key (velocities, occupancy, cost
+            # rate) — the stock keys above never change
+            self.obs.on_snapshot(snap, self)
+        return snap
 
     def _report(self, t_end: float) -> SimReport:
         self._cost_advance(t_end)      # settle the final billing segment
-        return SimReport(self.policy.name,
-                         self.finished + self._unfinished(),
+        requests = self.finished + self._unfinished()
+        if self.obs is not None:
+            self.obs.finalize(requests, t_end)
+        return SimReport(self.policy.name, requests,
                          self.gpu_seconds, t_end, self.timeline,
                          engine=self.engine,
                          preemptions=list(self.preemption_log),
@@ -2214,7 +2329,8 @@ class ClusterBase:
                          n_events=getattr(self, "n_events", 0),
                          n_deflected=self.n_deflected,
                          cost_dollars=self.cost_dollars,
-                         pool_cost=dict(self.pool_cost))
+                         pool_cost=dict(self.pool_cost),
+                         obs=self.obs)
 
 
 def _pred_out(req: SimRequest) -> int:

@@ -138,6 +138,17 @@ def run_spec(spec: ExperimentSpec,
         dt=spec.dt, preemption=spec.preemption,
         max_instances=spec.max_instances,
         snapshot_interval=spec.snapshot_interval)
+    if spec.telemetry:
+        # flight recorder (repro.obs): pure observer attached before the
+        # run so every hook site sees it; the default-off path above never
+        # imports the package
+        from repro.obs import FlightRecorder
+        cl.attach_obs(FlightRecorder(meta={
+            "policy": spec.policy, "seed": spec.seed,
+            "preemption": spec.preemption,
+            "routes": [{"model": r.model, "trace": r.trace, "rps": r.rps}
+                       for r in spec.fleet.routes],
+        }))
     return cl.run(trace, spec.duration + spec.extra_horizon)
 
 
@@ -210,7 +221,8 @@ def run_policy(policy_name: str, trace_name: str = "mixed",
                kv_alloc: str = "reserve",
                shared_prefix_prob: float = 0.0,
                shared_prefix_len: int = 512,
-               shared_prefix_count: int = 8) -> SimReport:
+               shared_prefix_count: int = 8,
+               telemetry: bool = False) -> SimReport:
     """The classic single-pool experiment, desugared to a one-pool spec.
     Kept byte-stable with the pre-pool control plane (golden fixtures).
     The KV-tier knobs (``block_size``/``hbm_frac``/``offload_gb``/
@@ -238,7 +250,8 @@ def run_policy(policy_name: str, trace_name: str = "mixed",
     spec = ExperimentSpec(
         fleet=fleet_spec, policy=policy_name, engine=engine,
         preemption=preemption, duration=duration, seed=seed, dt=dt,
-        predictor_accuracy=predictor_accuracy, max_instances=max_instances)
+        predictor_accuracy=predictor_accuracy, max_instances=max_instances,
+        telemetry=telemetry)
     profiles = {p.name: prof for p in fleet_spec.pools} if prof else None
     return run_spec(spec, profiles=profiles)
 

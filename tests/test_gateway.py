@@ -525,7 +525,12 @@ def test_experiment_spec_roundtrips_gateway_knobs():
 def test_gateway_disabled_by_default_and_spec_stays_legacy():
     rep = run_policy("tokenscale", "azure_conv", duration=10.0, rps=4.0,
                      seed=0)
-    assert rep.gw == {} and rep.gw_summary() == {}
+    # gateway off: raw stats stay empty, but the summary degrades to the
+    # full key set with zero values (stable schema for dashboards)
+    assert rep.gw == {}
+    gw = rep.gw_summary()
+    assert gw == RoutingStats().summary()
+    assert set(gw) and all(v == 0 for v in gw.values())
     # default knobs serialize away entirely, keeping old spec JSON stable
     fs = single_pool_fleet("llama31_8b", "a100", 1)
     d = ExperimentSpec(fleet=fs, duration=5.0).to_dict()

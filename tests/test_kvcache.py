@@ -459,7 +459,13 @@ def test_experiment_spec_roundtrips_kv_knobs():
 def test_kv_disabled_by_default():
     rep = run_policy("tokenscale", "azure_conv", duration=10.0, rps=4.0,
                      seed=0)
-    assert rep.kv == {} and rep.kv_summary() == {}
+    # KV tiers off: raw stats stay empty, but the summary degrades to the
+    # full key set with zero values (stable schema for dashboards)
+    assert rep.kv == {}
+    kv = rep.kv_summary()
+    assert set(kv) == set(KVStats().summary()) | {
+        "n_preempted", "preempted_ttft_p99", "preempted_tpot_p99"}
+    assert all(v == 0 for v in kv.values())
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,315 @@
+"""Flight-recorder observability layer (repro.obs).
+
+Pins the PR's acceptance properties:
+
+  * span conservation — for every finished request the gap-free span
+    chain sums to its recorded TTFT (first five spans) and E2E (all
+    six), across both engines and four subsystem regimes (priority
+    preemption, chunked deflection, locality gateway, KV tiers);
+  * token reconciliation — the recorder's prefill/decode odometers
+    match the SimReport's per-request aggregates;
+  * schema-valid exports — JSONL (hand-rolled validator) and
+    Chrome-trace JSON on both engines;
+  * explainer attributions — at least one scale-up reconstructed from
+    its Eq. 2-4 inputs and at least one TTFT violation attributed to
+    its dominant span on the burst trace;
+  * default-off purity — telemetry off leaves summaries and timelines
+    identical (the golden fixtures pin byte-identity repo-wide);
+  * the *_summary degradation contract and the new tail percentiles.
+"""
+from __future__ import annotations
+
+import json
+import math
+from functools import lru_cache
+
+import pytest
+
+from repro.core import ExperimentSpec
+from repro.obs import (FlightRecorder, SPAN_ORDER, TTFT_STAGE_LABELS,
+                       chrome_trace, explain, render_report, request_spans,
+                       trace_records, validate_trace_lines)
+from repro.obs.export import load_jsonl, write_chrome_trace, write_jsonl
+from repro.sim.instances import SimReport
+from repro.sim.runner import run_policy
+from repro.sim.traces import DEFAULT_PRIORITY_MIX
+
+ENGINES = ("fluid", "events")
+
+#: four subsystem regimes the span/token properties must hold in —
+#: contended preemption, chunked prefill deflection, the locality
+#: gateway with lazy paging, and the KV-tier swap/prefix stack.
+SCENARIOS = {
+    "preemption": dict(trace_name="burstgpt2", model="qwen25_32b", tp=2,
+                       duration=18.0, rps=8.0, seed=0, max_instances=2,
+                       preemption="evict-lowest",
+                       priority_mix=DEFAULT_PRIORITY_MIX),
+    "deflection": dict(trace_name="burstgpt1", model="llama31_8b", tp=1,
+                       duration=18.0, rps=40.0, seed=0, max_instances=6,
+                       prefill_chunking=2048),
+    "gateway": dict(trace_name="azure_code", model="qwen25_32b", tp=2,
+                    duration=15.0, rps=7.0, seed=0, max_instances=2,
+                    block_size=16, gateway=True, kv_alloc="lazy",
+                    prefix_cache=True, session_prob=0.4,
+                    shared_prefix_prob=0.7, shared_prefix_len=1024,
+                    shared_prefix_count=2),
+    "lazy_kv": dict(trace_name="azure_conv", model="qwen25_32b", tp=2,
+                    duration=15.0, rps=7.0, seed=0, max_instances=2,
+                    block_size=16, offload_gb=12.0, prefix_cache=True,
+                    session_prob=0.4, preemption="pause-requeue"),
+}
+
+
+@lru_cache(maxsize=None)
+def traced_report(scenario: str, engine: str) -> SimReport:
+    return run_policy("tokenscale", engine=engine, telemetry=True,
+                      **SCENARIOS[scenario])
+
+
+def _close(a: float, b: float) -> bool:
+    return abs(a - b) <= 1e-9 * max(1.0, abs(a), abs(b))
+
+
+# ---------------------------------------------------------------------------
+# span conservation + token reconciliation (the property grid)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_span_conservation(scenario, engine):
+    rep = traced_report(scenario, engine)
+    rec = rep.obs
+    finished = [r for r in rec.requests if r["finished"]]
+    assert finished, "scenario produced no finished requests"
+    for r in rec.requests:
+        spans = r["spans"]
+        # chain structure: lifecycle order, contiguous boundaries
+        names = [s["name"] for s in spans]
+        assert names == list(SPAN_ORDER[:len(names)])
+        for a, b in zip(spans, spans[1:]):
+            assert b["t0"] == a["t1"]
+        for s in spans:
+            assert s["t1"] >= s["t0"]
+        if not r["finished"]:
+            continue
+        assert len(spans) == len(SPAN_ORDER)
+        assert _close(sum(s["dur"] for s in spans[:5]), r["ttft"])
+        assert _close(sum(s["dur"] for s in spans), r["e2e"])
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("scenario", sorted(SCENARIOS))
+def test_token_reconciliation(scenario, engine):
+    rep = traced_report(scenario, engine)
+    rec = rep.obs
+    exp_prefill = sum(r.prefill_tokens for r in rep.requests)
+    exp_decode = sum(r.generated for r in rep.requests)
+    assert abs(rec.prefill_tokens_done - exp_prefill) \
+        <= 1e-6 * max(1.0, exp_prefill)
+    assert abs(rec.decode_tokens_done - exp_decode) \
+        <= 1e-6 * max(1.0, exp_decode)
+    # request records agree with the engine-side aggregates too
+    assert len(rec.requests) == len(rep.requests)
+    rec_gen = sum(r["generated"] for r in rec.requests)
+    assert abs(rec_gen - exp_decode) <= 1e-6 * max(1.0, exp_decode)
+
+
+def test_scenarios_exercise_their_subsystems():
+    """The grid actually hits the paths it claims to cover (otherwise the
+    conservation properties are vacuous there)."""
+    kinds_p = {e["kind"] for e in
+               traced_report("preemption", "events").obs.events}
+    assert "preempt" in kinds_p
+    rep_d = traced_report("deflection", "events")
+    assert rep_d.n_deflected > 0
+    kinds_d = {e["kind"] for e in rep_d.obs.events}
+    assert {"deflect", "chunk"} <= kinds_d
+    rep_g = traced_report("gateway", "events")
+    assert rep_g.gw_summary()["replications"] > 0
+    kinds_g = {e["kind"] for e in rep_g.obs.events}
+    assert "replication_planned" in kinds_g
+    assert traced_report("lazy_kv", "events").kv_summary()["prefix_hits"] \
+        >= 0
+
+
+# ---------------------------------------------------------------------------
+# exporters: JSONL + Chrome trace, schema-valid on both engines
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_jsonl_export_schema_valid(engine, tmp_path):
+    rec = traced_report("deflection", engine).obs
+    path = tmp_path / "trace.jsonl"
+    n = write_jsonl(rec, str(path))
+    records = load_jsonl(str(path))
+    assert len(records) == n
+    assert records[0]["type"] == "meta"
+    assert records[0]["engine"] == engine
+    assert validate_trace_lines(records) == []
+    types = {r["type"] for r in records}
+    assert {"meta", "decision", "request", "metrics", "totals"} <= types
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_chrome_trace_export(engine, tmp_path):
+    rec = traced_report("deflection", engine).obs
+    path = tmp_path / "trace.chrome.json"
+    write_chrome_trace(rec, str(path))
+    doc = json.loads(path.read_text())
+    ev = doc["traceEvents"]
+    spans = [e for e in ev if e["ph"] == "X"]
+    assert spans and all(e["dur"] >= 0 and e["name"] in SPAN_ORDER
+                         for e in spans)
+    assert any(e["ph"] == "i" for e in ev)       # point events/decisions
+    assert any(e["ph"] == "C" for e in ev)       # counter tracks
+    n_spans = sum(len(r["spans"]) for r in rec.requests)
+    assert len(spans) == n_spans
+
+
+def test_validator_catches_corruption():
+    rec = traced_report("deflection", "events").obs
+    records = trace_records(rec)
+    assert validate_trace_lines(records) == []
+    # missing meta head
+    assert validate_trace_lines(records[1:])
+    # span-chain gap
+    broken = json.loads(json.dumps(records))
+    req = next(r for r in broken if r["type"] == "request"
+               and len(r["spans"]) >= 2)
+    req["spans"][1]["t0"] += 0.5
+    assert any("gap" in e for e in validate_trace_lines(broken))
+    # unknown span name
+    broken2 = json.loads(json.dumps(records))
+    req2 = next(r for r in broken2 if r["type"] == "request" and r["spans"])
+    req2["spans"][0]["name"] = "warp_drive"
+    assert any("malformed span" in e for e in validate_trace_lines(broken2))
+
+
+# ---------------------------------------------------------------------------
+# explainer: Eq. 2-4 scale-up attribution + dominant-span violations
+# ---------------------------------------------------------------------------
+
+def test_explainer_attributes_scale_up_and_violations():
+    rec = traced_report("deflection", "events").obs
+    report = explain(trace_records(rec))
+    assert report["n_decisions"] > 0
+    ups = report["scale_ups"]
+    assert ups, "burst trace produced no scale-up to explain"
+    with_eq = [u for u in ups if u["inputs"].get("eq2")]
+    assert with_eq, "no scale-up carried Eq. 2-4 inputs"
+    eq2 = with_eq[0]["inputs"]["eq2"]
+    for key in ("token_rate_in", "deflected_rate", "rate", "v_prefill",
+                "v_network", "v_eff", "i_p"):
+        assert key in eq2
+    assert with_eq[0]["inputs"]["eq3"]["rate_by_bucket"]
+    # Eq. 2 arithmetic is internally consistent in the recorded inputs
+    assert _close(eq2["rate"],
+                  max(eq2["token_rate_in"] - eq2["deflected_rate"], 0.0))
+    assert eq2["v_eff"] == min(eq2["v_prefill"], eq2["v_network"])
+    vio = report["violations"]
+    assert vio, "saturated burst fleet produced no TTFT violations"
+    v = vio[0]
+    assert v["ttft"] > v["slo"]
+    assert v["dominant"] in TTFT_STAGE_LABELS
+    assert v["stage"] == TTFT_STAGE_LABELS[v["dominant"]]
+    assert v["spans"][v["dominant"]] == max(v["spans"].values())
+    assert report["violations_by_stage"]
+
+
+def test_render_report_shows_eq_arithmetic():
+    rec = traced_report("deflection", "events").obs
+    text = render_report(explain(trace_records(rec)))
+    assert "Eq.2" in text and "v_eff" in text
+    assert "## scale-ups" in text
+    assert "## TTFT SLO violations" in text
+    assert "dominant stage" in text
+
+
+# ---------------------------------------------------------------------------
+# default-off purity + spec plumbing
+# ---------------------------------------------------------------------------
+
+def test_telemetry_off_is_identical():
+    cfg = dict(trace_name="azure_conv", duration=12.0, rps=6.0, seed=0)
+    for engine in ENGINES:
+        off = run_policy("tokenscale", engine=engine, **cfg)
+        on = run_policy("tokenscale", engine=engine, telemetry=True, **cfg)
+        assert off.obs is None and on.obs is not None
+        off_s, on_s = off.summary(), on.summary()
+        assert off_s == on_s
+        # timeline rows: identical stock keys; telemetry adds only "obs"
+        assert len(off.timeline) == len(on.timeline)
+        for a, b in zip(off.timeline, on.timeline):
+            assert set(b) - set(a) == {"obs"}
+            assert a == {k: v for k, v in b.items() if k != "obs"}
+
+
+def test_spec_telemetry_field_roundtrip():
+    from repro.core.fleet import single_pool_fleet
+    fs = single_pool_fleet("llama31_8b", "a100", 1)
+    # default-off serializes away (old spec JSON stays stable)
+    d = ExperimentSpec(fleet=fs, duration=5.0).to_dict()
+    assert "telemetry" not in d
+    spec = ExperimentSpec(fleet=fs, duration=5.0, telemetry=True)
+    back = ExperimentSpec.from_json(spec.to_json())
+    assert back.telemetry is True
+    assert back == spec
+
+
+# ---------------------------------------------------------------------------
+# satellite: new tail percentiles + *_summary degradation contract
+# ---------------------------------------------------------------------------
+
+def test_summary_gains_tail_percentiles():
+    rep = traced_report("deflection", "events")
+    s = rep.summary()
+    assert s["tpot_p99"] == rep.percentile("tpot", 99)
+    assert s["ttft_p999"] == rep.percentile("ttft", 99.9)
+    assert s["ttft_p999"] >= s["ttft_p99"]
+
+
+def test_summary_helpers_degrade_to_zero_valued_schemas():
+    rep = SimReport(name="empty", requests=[], gpu_seconds=0.0,
+                    duration=1.0)
+    cs = rep.class_summary(0)
+    assert cs == {"n": 0, "slo_attainment": 0.0, "ttft_p99": 0.0,
+                  "tpot_p99": 0.0}
+    ms = rep.model_summary("nope")
+    assert ms["n"] == 0 and set(ms) == {
+        "n", "slo_attainment", "ttft_attainment", "tpot_attainment",
+        "throughput", "ttft_p99"}
+    assert all(v == 0 for v in ms.values())
+    kv = rep.kv_summary()
+    assert kv and all(v == 0 for v in kv.values())
+    gw = rep.gw_summary()
+    assert gw and all(v == 0 for v in gw.values())
+    # the populated schemas carry the same key sets (no schema forks)
+    full = traced_report("preemption", "events")
+    assert set(full.class_summary(0)) == set(cs)
+    assert set(full.model_summary("qwen25_32b")) == set(ms)
+
+
+def test_unfinished_request_spans_are_valid_prefix():
+    """A request cut off mid-flight yields a truncated-but-contiguous
+    chain (negative sentinel timestamps never leak into spans)."""
+    class Src:
+        t, rid, in_len, out_len = 1.0, 7, 128, 64
+    class Req:
+        src = Src()
+        t_prefill_start, t_prefill_end = 1.5, 2.0
+        t_kv_ready, t_decode_start = 2.1, -1.0
+        t_first_token, t_finish = -1.0, -1.0
+    spans = request_spans(Req())
+    assert [s["name"] for s in spans] == ["queue_wait", "prefill",
+                                         "kvc_transfer"]
+    assert all(s["dur"] >= 0 for s in spans)
+
+
+def test_recorder_meta_reaches_trace_head(tmp_path):
+    rep = traced_report("preemption", "fluid")
+    rec = rep.obs
+    assert rec.engine == "fluid"
+    head = trace_records(rec)[0]
+    assert head["type"] == "meta"
+    assert head["policy"] == "tokenscale"
+    assert "dt" in head and "duration" in head
