@@ -779,6 +779,69 @@ def pareto():
                      100 * rep.slo_attainment(model=m))
 
 
+#: the chaos fleet: the llama31-8B a100 pool under a bursty trace with a
+#: full fault mix — two decode crashes (KV purge + resident re-entry),
+#: one prefill crash, a prefill straggler window, a swap-bandwidth
+#: degradation, and two KVC link outages (sim.faults; every injection
+#: lands, none skipped).  The priority mix + evict-lowest preemption
+#: compose the shedding path: when crashes cost more capacity than the
+#: replacement latency hides, the lowest class absorbs the loss.
+CHAOS_CFG = dict(model="llama31_8b", chip="a100", tp=1, duration=60.0,
+                 rps=12.0, seed=0)
+CHAOS_TRACE = "burstgpt1"
+CHAOS_MIX = {0: 0.2, 1: 0.6, 2: 0.2}
+CHAOS_FAULTS = dict(seed=0, crashes=3, stragglers=1, swap_degrades=1,
+                    link_outages=2, t0=8.0)
+#: variant -> FaultConfig.recovery: the same fault schedule with the
+#: self-healing control plane on vs blind (husks keep billing + counting,
+#: residents re-enter only on client timeout)
+CHAOS_VARIANTS = {"recovery": True, "norecovery": False}
+
+
+def run_chaos_variant(variant: str, duration: float = None,
+                      engine: str = "events"):
+    """One chaos bench cell (shared with the golden regenerator and the
+    smoke row, so the fixture and the bench can never drift apart)."""
+    cfg = dict(CHAOS_CFG)
+    if duration is not None:
+        cfg["duration"] = duration
+    return run_policy("tokenscale", CHAOS_TRACE, engine=engine,
+                      preemption="evict-lowest", priority_mix=CHAOS_MIX,
+                      block_size=16, prefix_cache=True,
+                      faults=dict(CHAOS_FAULTS,
+                                  recovery=CHAOS_VARIANTS[variant]), **cfg)
+
+
+def chaos():
+    """Fault injection with vs without the self-healing control plane,
+    on the identical seeded fault schedule, through both engines.  The
+    acceptance gradient (pinned by tests/golden/chaos_recovery.json):
+    recovery-on strictly beats recovery-off on class-0 SLO attainment
+    AND p99 TTFT on both engines — detection + warm replacement + KVC
+    retry/fallback + prefix-reuse re-entry together beat a control plane
+    that only sees the damage through lagging queue signals."""
+    for engine in ("events", "fluid"):
+        for variant in CHAOS_VARIANTS:
+            rep = run_chaos_variant(variant, engine=engine)
+            fs = rep.fault_summary()
+            c0 = rep.class_summary(0)
+            pre = f"{CHAOS_TRACE},{engine},{variant}"
+            emit("chaos", f"{pre},requests", len(rep.requests))
+            emit("chaos", f"{pre},slo_pct", 100 * rep.slo_attainment())
+            emit("chaos", f"{pre},class0_slo_pct",
+                 100 * c0["slo_attainment"])
+            emit("chaos", f"{pre},class0_ttft_p99_ms",
+                 1e3 * c0["ttft_p99"])
+            emit("chaos", f"{pre},ttft_p99_ms",
+                 1e3 * rep.percentile("ttft", 99))
+            emit("chaos", f"{pre},avg_gpus", rep.avg_gpus())
+            for k in ("crashes", "restarts", "residents_requeued",
+                      "prefill_requeued", "kvc_retries", "kvc_fallbacks",
+                      "straggler_windows", "swap_degrade_windows",
+                      "link_down_windows", "skipped"):
+                emit("chaos", f"{pre},{k}", fs[k])
+
+
 def hetero():
     """Heterogeneous fleet (a100-TP2 prefill + h100-TP1 decode pools) and
     a two-model cluster, each through both engines via the same
@@ -819,8 +882,10 @@ def smoke():
     through the event engine), a heterogeneous-fleet row (mixed chips/TP
     through run_spec), a kvtiers row (paged KV + host-DRAM swap + prefix
     reuse on the contended fleet), a gateway row (hashtrie locality
-    routing + lazy paging on the hot-prompt trace), and a deflect row
-    (chunked prefill deflection on the saturated burst fleet)."""
+    routing + lazy paging on the hot-prompt trace), a deflect row
+    (chunked prefill deflection on the saturated burst fleet), and a
+    chaos row (seeded fault injection with the self-healing control
+    plane)."""
     from repro.sim.traces import DEFAULT_PRIORITY_MIX
     for eng in ["fluid", "events"]:
         rep = run_policy("tokenscale", "azure_conv", duration=20.0, rps=6.0,
@@ -867,6 +932,13 @@ def smoke():
     emit("smoke", "pareto,slo_pct", 100 * rep.slo_attainment())
     emit("smoke", "pareto,cost_dollars", cs["cost_dollars"])
     emit("smoke", "pareto,avg_gpus", rep.avg_gpus())
+    rep = run_chaos_variant("recovery", duration=35.0)
+    fs = rep.fault_summary()
+    emit("smoke", "chaos,requests", len(rep.requests))
+    emit("smoke", "chaos,slo_pct", 100 * rep.slo_attainment())
+    emit("smoke", "chaos,crashes", fs["crashes"])
+    emit("smoke", "chaos,restarts", fs["restarts"])
+    emit("smoke", "chaos,residents_requeued", fs["residents_requeued"])
 
 
 def perfscale():
@@ -973,6 +1045,7 @@ BENCHES = {
     "gateway": gateway,
     "deflect": deflect,
     "pareto": pareto,
+    "chaos": chaos,
     "hetero": hetero,
     "perfscale": perfscale,
     "obs": obs,

@@ -16,7 +16,7 @@ if [[ "${1:-}" == "--slow" ]]; then
     python -m pytest -x -q -m slow
 fi
 
-echo "== benchmark smoke (both sim engines + tails/preemption + hetero fleet + kvtiers + gateway + deflect + pareto rows) =="
+echo "== benchmark smoke (both sim engines + tails/preemption + hetero fleet + kvtiers + gateway + deflect + pareto + chaos rows) =="
 python -m benchmarks.run --bench=smoke
 
 echo "== golden fixtures reproduce byte-identically (regen dry run) =="

@@ -211,6 +211,39 @@ def regen_pareto():
     return "pareto_coord.json", out
 
 
+def regen_chaos():
+    """Chaos-recovery golden on the fault-injected burst fleet
+    (benchmarks.run.run_chaos_variant, so the fixture and the bench share
+    one recipe): per-variant summary + class-0 tails + fault/recovery
+    odometers through both engines, pinning the acceptance gradient —
+    recovery-on strictly beats recovery-off on class-0 SLO attainment
+    AND p99 TTFT on both engines.  The gradient is asserted here too, so
+    a regeneration that loses it fails instead of silently pinning a
+    regression."""
+    from benchmarks.run import (CHAOS_CFG, CHAOS_FAULTS, CHAOS_MIX,
+                                CHAOS_TRACE, CHAOS_VARIANTS,
+                                run_chaos_variant)
+    out = {"trace": CHAOS_TRACE, "fleet": dict(CHAOS_CFG),
+           "priority_mix": {str(k): v for k, v in CHAOS_MIX.items()},
+           "faults": dict(CHAOS_FAULTS),
+           "variants": dict(CHAOS_VARIANTS),
+           "engines": {}}
+    for eng in ["fluid", "events"]:
+        rows = {}
+        for variant in CHAOS_VARIANTS:
+            rep = run_chaos_variant(variant, engine=eng)
+            s = rep.summary()             # schema shared with the test
+            s["class0"] = rep.class_summary(0)
+            s["faults"] = rep.fault_summary()
+            rows[variant] = s
+        rec, blind = rows["recovery"], rows["norecovery"]
+        assert rec["class0"]["slo_attainment"] \
+            > blind["class0"]["slo_attainment"], (eng, "class-0 SLO")
+        assert rec["ttft_p99"] < blind["ttft_p99"], (eng, "p99 TTFT")
+        out["engines"][eng] = rows
+    return "chaos_recovery.json", out
+
+
 def render(spec: dict) -> str:
     return json.dumps(spec, indent=2) + "\n"
 
@@ -228,7 +261,8 @@ def main(argv=None):
                        regen_kvtiers(),
                        regen_gateway(),
                        regen_deflect(),
-                       regen_pareto()]:
+                       regen_pareto(),
+                       regen_chaos()]:
         path = os.path.join(HERE, name)
         text = render(spec)
         if args.check:

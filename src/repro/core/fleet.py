@@ -291,6 +291,13 @@ class ExperimentSpec:
     # SimReport.obs.  Off by default — the engines' telemetry hooks are
     # no-ops and the run is byte-identical to a pre-telemetry build.
     telemetry: bool = False
+    # chaos engine (sim.faults.FaultConfig as a dict): a seeded,
+    # deterministic fault schedule — instance crashes with warm restart,
+    # straggler chips, degraded swap bandwidth, KVC link outages — plus
+    # the self-healing control plane gated by its ``recovery`` key.  None
+    # (default) builds no schedule and the run is byte-identical to a
+    # pre-chaos build.
+    faults: Optional[dict] = None
 
     # ---- JSON round trip -------------------------------------------------
     def to_dict(self) -> dict:
@@ -303,6 +310,9 @@ class ExperimentSpec:
         if not d.get("telemetry"):
             # same schema-stability rule for the telemetry knob
             d.pop("telemetry", None)
+        if not d.get("faults"):
+            # ...and for the chaos knob
+            d.pop("faults", None)
         for p in d["fleet"]["pools"]:
             # same schema-stability rule for the chunking knob: pools that
             # keep the legacy wholesale-conversion default serialize
@@ -379,6 +389,11 @@ class PoolSnapshot:
     idle: int = 0
     # instances marked draining: finishing residents, billed, no new work
     draining: int = 0
+    # measured effective velocity of the pool's serving instances as a
+    # fraction of nominal (mean per-instance multiplier; < 1.0 under
+    # straggler windows).  Filled only by the chaos engine's self-healing
+    # path — stays 1.0 otherwise, and planners treat 1.0 as "no signal".
+    eff_perf: float = 1.0
 
 
 @dataclass
@@ -502,8 +517,18 @@ class PerModelFleetPolicy(FleetPolicy):
             dec: ScaleDecision = pol.decide(flat_observation(model, obs))
             (pre_pool,) = obs.pools_of(model, "prefill")
             (dec_pool,) = obs.pools_of(model, "decode")
-            plan.targets[pre_pool.name] = dec.prefillers
-            plan.targets[dec_pool.name] = dec.decoders
+            tp, td = dec.prefillers, dec.decoders
+            # measured effective velocity (chaos self-healing path):
+            # straggling boxes deliver eff_perf * nominal tokens/s, so
+            # Eq. 2-4's instance counts are inflated to restore the
+            # provisioned token velocity.  eff_perf is 1.0 outside fault
+            # windows — these branches never fire on a healthy fleet.
+            if pre_pool.eff_perf < 1.0:
+                tp = math.ceil(tp / max(pre_pool.eff_perf, 0.1))
+            if dec_pool.eff_perf < 1.0:
+                td = math.ceil(td / max(dec_pool.eff_perf, 0.1))
+            plan.targets[pre_pool.name] = tp
+            plan.targets[dec_pool.name] = td
             if dec.live:
                 plan.live |= {pre_pool.name, dec_pool.name}
             if pol.last_debug is not None:
@@ -591,6 +616,11 @@ class CoordinatedTokenScalePolicy(FleetPolicy):
                 spec: PoolSpec, take: int, burst: bool = False):
         snap = obs.pools[spec.name]
         tgt = max(take, spec.min)
+        if snap.eff_perf < 1.0:
+            # stragglers deliver eff_perf * nominal velocity: inflate the
+            # pool's target so provisioned token velocity is restored
+            # (chaos self-healing path; 1.0 — i.e. never — otherwise)
+            tgt = math.ceil(tgt / max(snap.eff_perf, 0.1))
         active = snap.count - snap.draining
         if burst:
             # §IV-A gate: while the model's burst detector is hot, never
@@ -788,3 +818,15 @@ def build_fleet_policy(name: str, fleet: FleetSpec,
 @register_fleet_policy("tokenscale-coord")
 def _build_tokenscale_coord(fleet, profiles, **kw):
     return CoordinatedTokenScalePolicy(fleet, profiles, **kw)
+
+
+def __getattr__(name: str):
+    # Lazy re-export of the chaos-engine control-plane pieces (the health
+    # monitor conceptually belongs to the fleet layer, but the
+    # implementation lives with the fault machinery).  Lazy because an
+    # eager ``core.fleet -> sim.faults`` import would cycle through
+    # ``repro.sim.__init__`` back into this module.
+    if name in ("FaultConfig", "FaultStats", "HealthMonitor"):
+        from repro.sim import faults
+        return getattr(faults, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -182,6 +182,18 @@ class FlightRecorder:
         self.event(t, "spill", src=src, dst=dst, n=n)
         self.metrics.inc("spills", n)
 
+    def on_fault(self, t: float, kind: str, **fields):
+        """One chaos-engine injection (sim.faults): kind is "crash" /
+        "straggler" / "swap_degrade" / "link_down" / "kvc_fallback"."""
+        self.event(t, "fault_" + kind, **fields)
+        self.metrics.inc("fault_" + kind)
+
+    def on_recovery(self, t: float, kind: str, **fields):
+        """One self-healing action: kind is "restart" (husk reaped, warm
+        replacement provisioned) / "straggler_end" / "swap_restore"."""
+        self.event(t, "recovery_" + kind, **fields)
+        self.metrics.inc("recovery_" + kind)
+
     def event(self, t: float, kind: str, **fields):
         """Generic point event."""
         rec = {"type": "event", "t": t, "kind": kind}

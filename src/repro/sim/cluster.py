@@ -61,7 +61,12 @@ class Cluster(ClusterBase):
             # quantized to dt, unlike the event engine's exact stamps
             self.obs.meta.setdefault("dt", self.dt)
             self.obs.meta.setdefault("duration", t_end)
+        self._faults_begin(t_end)
         while t < t_end:
+            # ---- chaos engine: due fault injections, tick granularity
+            # (the event engine schedules them as exact events) ----
+            if self._faults_tick(t):
+                gpus = self._gpu_count(t)
             # ---- arrivals ----
             while ti < len(trace) and trace[ti].t <= t:
                 self._on_arrival(SimRequest(trace[ti]), t)

@@ -107,6 +107,12 @@ class EventCluster(ClusterBase):
             self.obs.meta.setdefault("duration", t_end)
         self._push(0.0, "scale")
         self._push(0.0, "snapshot")
+        # chaos engine: the pre-drawn schedule becomes exact heap events
+        # (faults off: no schedule, no events, byte-identical heap order)
+        self._faults_begin(t_end)
+        for item in self._fault_work:
+            self._push(item[0], "fault", item)
+        self._fault_work = []
         t_cur = 0.0
         heap = self._heap
         # the fleet only changes inside scale events: cache the GPU count
@@ -146,7 +152,9 @@ class EventCluster(ClusterBase):
             t_cur = te
             self.n_events += 1
             getattr(self, "_ev_" + kind)(te, *data)
-            if kind == "scale":
+            if kind == "scale" or kind == "fault":
+                # faults change the fleet outside scale events (crash
+                # billing husks, reaps swapping in replacements)
                 gpus = self._gpu_count(te)
         self.gpu_seconds += gpus * (t_end - t_cur)
         return self._report(t_end)
@@ -183,16 +191,24 @@ class EventCluster(ClusterBase):
     def _ev_prefill_done(self, t: float, p: Prefiller, req: SimRequest):
         p._busy = False
         if not p.live:
-            # instance was scaled down mid-flight: requeue its head on the
-            # central queue (should not happen — only idle instances are
-            # removed — but stay safe)
+            # the instance died mid-flight (chaos-engine crash, or the
+            # defensive scale-down path): pull the head off the dead
+            # box's queue so it is owned by exactly one place, then
+            # requeue it on the central queue — re-prefilled exactly once
+            if p.queue and p.queue[0][0] is req:
+                p.queue.pop(0)
+                p._inflight_cache = None
             self._wait_add(req)
+            self._drain_wait_queue(t)
             return
         if p.queue and p.queue[0][0] is req:
             p.queue.pop(0)
             p._inflight_cache = None
-        kv_ready_t, _ = self._to_network(req, t, p.pool)  # sets t_prefill_end
-        self._push(kv_ready_t, "kv_ready")
+        res = self._to_network(req, t, p.pool)   # sets t_prefill_end
+        if res is not None:
+            self._push(res[0], "kv_ready")
+        # res None: KVC link outage exhausted the retry ladder and the
+        # prompt fell back to the central queue — re-routed just below
         self._drain_wait_queue(t)          # prefill capacity freed (§IV-E)
         self._kick_prefiller(p, t)
 
@@ -212,6 +228,16 @@ class EventCluster(ClusterBase):
         *exactly now*: install the copy on its target (the fluid engine
         approximates the same completion at tick granularity)."""
         self._service_gateway(t)
+
+    def _ev_fault(self, t: float, item: tuple):
+        """One chaos-engine work item fires *exactly now* (injection,
+        straggler/swap window end, or husk reap).  Derived items go back
+        on the heap as further fault events; work the fault displaced
+        (crash requeues) re-enters the pipeline immediately."""
+        for derived in self._fault_fire(t, item):
+            self._push(derived[0], "fault", derived)
+        self._drain_wait_queue(t)
+        self._admit_pending(t)
 
     def _ev_iter_done(self, t: float, d: Decoder, it: float):
         d._iter_pending = False

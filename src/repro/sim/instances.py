@@ -34,7 +34,7 @@ from __future__ import annotations
 import heapq
 from bisect import bisect_right, insort
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Optional
 
 import numpy as np
@@ -56,6 +56,8 @@ from repro.core.velocity import (BUCKET_OUTPUT, VelocityProfile, bucket_of,
                                  chunked_prefill_velocity,
                                  deflected_prefill_rate,
                                  headroom_chunk_tokens)
+from repro.sim.faults import (FaultConfig, FaultStats, HealthMonitor,
+                              build_schedule, pick_target)
 from repro.sim.kvcache import KVAllocator, KVStats, KVTierConfig
 
 #: chunked prefill: minimum per-iteration progress (tokens) once a chunk
@@ -231,6 +233,12 @@ class Instance:
         # only ever test it for None, so disabled telemetry costs one
         # attribute test and cannot perturb float math or event order.
         self.obs = None
+        # effective-velocity multiplier (sim.faults straggler windows);
+        # 1.0 = nominal chip.  Decoders fold it into the iteration
+        # roofline (guarded, so the nominal path is bitwise unchanged);
+        # prefillers scale v_p directly and keep this as the marker the
+        # fleet observation reads (PoolSnapshot.eff_perf).
+        self.perf = 1.0
 
     def ready(self, t: float) -> bool:
         return t >= self.ready_t
@@ -686,7 +694,12 @@ class Decoder(Instance):
             chunk = self.conv.chunk_size
             f += max(chunk - b, 0) * c.flops_tok
             mem += max(chunk - b, 0) * c.kv_tok
-        return max(mem / self.spec.hbm_bw, f / self.spec.flops)
+        it = max(mem / self.spec.hbm_bw, f / self.spec.flops)
+        if self.perf != 1.0:
+            # straggler chip (sim.faults): the whole roofline slows by
+            # the effective-velocity factor for the window's duration
+            it /= self.perf
+        return it
 
     # ---- chunked prefill (per-iteration co-scheduling) ----
     def mixed_iter_time(self, chunk_tok: float) -> float:
@@ -700,7 +713,10 @@ class Decoder(Instance):
         f, mem = self._iter_terms()
         f += chunk_tok * c.flops_tok
         mem += chunk_tok * c.kv_tok
-        return max(mem / self.spec.hbm_bw, f / self.spec.flops)
+        it = max(mem / self.spec.hbm_bw, f / self.spec.flops)
+        if self.perf != 1.0:
+            it /= self.perf
+        return it
 
     def _tpot_budget(self) -> float:
         """Eq. 5's TPOT budget for the *strictest* resident class (the
@@ -997,6 +1013,9 @@ class SimReport:
     # gateway or lazy paging — kept separate from ``kv`` so the kvtiers
     # golden's pinned schema never changes)
     gw: dict = field(default_factory=dict)
+    # chaos-engine injection/recovery counters
+    # (sim.faults.FaultStats.summary(); {} when faults are off)
+    faults: dict = field(default_factory=dict)
     # events processed by the run (event engine; 0 for fluid) — the
     # perf-bench suite's events/sec numerator (benchmarks/perf.py)
     n_events: int = 0
@@ -1207,6 +1226,16 @@ class SimReport:
             return RoutingStats().summary()
         return dict(self.gw)
 
+    def fault_summary(self) -> dict:
+        """Chaos-engine counters: injections by kind, crash restarts,
+        requeued work, KVC retry/backoff totals — the schema the
+        ``chaos_recovery`` golden and its regenerator share.  When faults
+        are off the same key set comes back zero-valued (see
+        ``kv_summary``)."""
+        if not self.faults:
+            return FaultStats().summary()
+        return dict(self.faults)
+
 
 # ---------------------------------------------------------------------------
 # Control plane glue — shared by both engines
@@ -1245,7 +1274,8 @@ class ClusterBase:
                  dt: float = 0.025, scale_interval: float = 1.0,
                  max_instances: int = 64,
                  preemption: "PreemptionPolicy | str" = "none",
-                 snapshot_interval: Optional[float] = None):
+                 snapshot_interval: Optional[float] = None,
+                 faults: "FaultConfig | dict | None" = None):
         if isinstance(cfg, Fleet):
             fleet = cfg
             fpolicy = policy if policy is not None else inst_spec
@@ -1340,6 +1370,20 @@ class ClusterBase:
         # rolling 1-s gateway counters (deque: the 5 s window expires from
         # the left instead of rebuilding the list on every arrival)
         self._arrivals: deque[tuple[float, SimRequest]] = deque()
+        # ---- chaos engine (sim.faults): None = faults off — no schedule
+        # is built, every per-tick/per-event hook fast-paths out, and the
+        # pre-chaos goldens stay byte-identical ----
+        self.faults: Optional[FaultConfig] = None if not faults else (
+            faults if isinstance(faults, FaultConfig)
+            else FaultConfig.from_dict(dict(faults)))
+        self.fault_stats = FaultStats()
+        self._fault_work: list[tuple] = []   # (t, kind, *payload), sorted
+        self._link_down_until = -1.0         # KVC link-outage window end
+        self._monitor = HealthMonitor(self.faults.detect_s) \
+            if self.faults is not None else None
+        # measured effective velocity feeds Eq. 2-4 only on the
+        # self-healing path (the observation stays byte-stable otherwise)
+        self._fault_eff = self.faults is not None and self.faults.recovery
 
     # ---- flight-recorder attachment (repro.obs) ----------------------
     def attach_obs(self, rec):
@@ -1779,7 +1823,12 @@ class ClusterBase:
                 st.oom_preemptions += 1
 
     def _to_network(self, req: SimRequest, t: float,
-                    pool: Optional[Pool] = None) -> tuple[float, SimRequest]:
+                    pool: Optional[Pool] = None
+                    ) -> Optional[tuple[float, SimRequest]]:
+        """Ship the finished prefill's KV over the interconnect; returns
+        the ``pending_decode`` entry — or None when a KVC link outage
+        exhausted the retry ladder and the prompt fell back to the central
+        queue for a recompute (``sim.faults``; chaos runs only)."""
         req.t_prefill_end = t
         # the KVC leaves over the *completing* prefiller's interconnect —
         # engines pass its pool, so heterogeneous prefill pool sets charge
@@ -1791,6 +1840,17 @@ class ClusterBase:
         # blocks already live on the decode side)
         delay = hw.kvc_transfer_time(pool.cfg, pool.inst,
                                      req.src.in_len - req.kv_hit_tokens)
+        if self.faults is not None and t < self._link_down_until:
+            wait = self._link_wait(t)
+            if wait is None:
+                # retry ladder exhausted inside the outage window: fall
+                # back to recomputing the prompt at the prefill stage
+                self.fault_stats.kvc_fallbacks += 1
+                if self.obs is not None:
+                    self.obs.on_fault(t, "kvc_fallback", rid=req.src.rid)
+                self._wait_add(req)
+                return None
+            delay += wait
         if self.obs is not None:
             # prefiller-side completion odometer + the transfer event
             # (on-box completions are counted in Decoder.advance_prefill)
@@ -2089,6 +2149,265 @@ class ClusterBase:
         """Engine hook: the event engine schedules a retry at the victim's
         re-entry ready time."""
 
+    # ---- chaos engine (sim.faults; DESIGN.md "Fault fidelity") --------
+    def _faults_begin(self, t_end: float):
+        """Draw the run's injection schedule — a pure function of the
+        fault config and the horizon, from its own RNG substream.  The
+        fluid engine drains it at tick granularity (``_faults_tick``);
+        the event engine converts it to exact heap events
+        (``_ev_fault``)."""
+        if self.faults is None:
+            self._fault_work = []
+            return
+        self._fault_work = [(ev.t, "inject", ev)
+                            for ev in build_schedule(self.faults, t_end)]
+
+    def _faults_tick(self, t: float) -> bool:
+        """Fluid engine: fire every due fault work item.  Returns True
+        when anything fired, so the caller refreshes its cached GPU
+        count (crashes/reaps change the fleet outside ``_scale``)."""
+        w = self._fault_work
+        if not w or w[0][0] > t:
+            return False
+        while w and w[0][0] <= t:
+            item = w.pop(0)
+            for derived in self._fault_fire(t, item):
+                insort(w, derived, key=lambda x: x[0])
+        return True
+
+    def _fault_candidates(self, role: str, t: float) -> list:
+        return [i for p in self.fleet.role_pools(role)
+                for i in p.instances
+                if i.live and i.ready(t) and not i.draining]
+
+    def _fault_fire(self, t: float, item: tuple) -> list[tuple]:
+        """Apply one fault work item; returns derived items (window
+        ends, husk reaps) for the engine to schedule.  Shared verbatim
+        by both engines, so a given schedule produces the same state
+        transitions — only the timing granularity differs."""
+        kind = item[1]
+        if kind == "inject":
+            return self._fault_inject(t, item[2])
+        if kind == "straggler_end":
+            inst, orig_v = item[2], item[3]
+            inst.perf = 1.0
+            if isinstance(inst, Prefiller):
+                inst.v_p = orig_v
+            else:
+                inst._iter_cache = None
+            if self.obs is not None:
+                self.obs.on_recovery(t, "straggler_end",
+                                     instance=inst.iid)
+            return []
+        if kind == "swap_restore":
+            inst, orig_cfg = item[2], item[3]
+            if inst.kv is not None:
+                inst.kv.cfg = orig_cfg
+            if self.obs is not None:
+                self.obs.on_recovery(t, "swap_restore",
+                                     instance=inst.iid)
+            return []
+        if kind == "reap":
+            return self._fault_reap(t, item[2], item[3], item[4])
+        raise ValueError(f"unknown fault work item {item!r}")
+
+    def _fault_inject(self, t: float, ev) -> list[tuple]:
+        st = self.fault_stats
+        if ev.kind == "link_down":
+            st.link_down_windows += 1
+            self._link_down_until = max(self._link_down_until, t + ev.dur)
+            if self.obs is not None:
+                self.obs.on_fault(t, "link_down", until=t + ev.dur)
+            return []
+        if ev.kind == "crash":
+            inst = pick_target(ev, self._fault_candidates(ev.role, t))
+            if inst is None:
+                st.skipped += 1
+                return []
+            return self._fault_crash(t, inst, ev)
+        if ev.kind == "straggler":
+            inst = pick_target(ev, self._fault_candidates(ev.role, t))
+            if inst is None:
+                st.skipped += 1
+                return []
+            st.straggler_windows += 1
+            orig_v = 0.0
+            inst.perf = ev.factor
+            if isinstance(inst, Prefiller):
+                orig_v = inst.v_p
+                inst.v_p *= ev.factor
+            else:
+                inst._iter_cache = None
+            if self.obs is not None:
+                self.obs.on_fault(t, "straggler", instance=inst.iid,
+                                  factor=ev.factor, dur=ev.dur)
+            return [(t + ev.dur, "straggler_end", inst, orig_v)]
+        if ev.kind == "swap_degrade":
+            cands = [d for d in self._fault_candidates("decode", t)
+                     if getattr(d, "kv", None) is not None]
+            inst = pick_target(ev, cands)
+            if inst is None:
+                st.skipped += 1
+                return []
+            st.swap_degrade_windows += 1
+            # per-instance KVTierConfig (built by _make_allocator), so
+            # swapping the frozen cfg object degrades just this box
+            orig_cfg = inst.kv.cfg
+            inst.kv.cfg = replace(orig_cfg,
+                                  swap_bw=orig_cfg.swap_bw * ev.factor)
+            if self.obs is not None:
+                self.obs.on_fault(t, "swap_degrade", instance=inst.iid,
+                                  factor=ev.factor, dur=ev.dur)
+            return [(t + ev.dur, "swap_restore", inst, orig_cfg)]
+        raise ValueError(f"unknown fault kind {ev.kind!r}")
+
+    def _fault_crash(self, t: float, inst, ev) -> list[tuple]:
+        """Instance crash: queued work is lost, on-box KV is gone, the
+        box is a dead husk.  With recovery on, the health monitor
+        notices at its next probe tick, the husk leaves the books and a
+        warm replacement boots (``startup_s`` x jitter) — the planner's
+        Eq. 2-4 view counts the lost capacity as missing supply
+        immediately.  With recovery off the husk stays on the books —
+        counted by the planner, billed, skipped by routing only via
+        ``draining`` — the lagging-signal contrast ``--bench=chaos``
+        measures."""
+        st = self.fault_stats
+        st.crashes += 1
+        # fleet state mutates outside _scale/_report: settle billing over
+        # the closing constant segment first (see _cost_advance)
+        self._cost_advance(t)
+        pool = inst.pool
+        inst.live = False
+        inst.draining = True   # _ready() filters draining, not live
+        if self.obs is not None:
+            self.obs.on_fault(t, "crash", instance=inst.iid,
+                              pool=pool.spec.name, role=pool.spec.role)
+        if isinstance(inst, Prefiller):
+            # in the event engine the head's completion event is already
+            # in flight; its handler sees ``not live`` and requeues the
+            # head exactly once — everything else requeues here
+            keep = 1 if getattr(inst, "_busy", False) else 0
+            lost = inst.queue[keep:]
+            del inst.queue[keep:]
+            inst._inflight_cache = None
+            for req, _rem in lost:
+                st.prefill_requeued += 1
+                self._wait_add(req)
+        else:
+            self._fault_crash_decoder(t, inst)
+        for g in self.fleet.groups.values():
+            g._decode_cache = None
+            g._prefill_cache = None
+        if not self.faults.recovery:
+            return []
+        t_detect = self._monitor.detect_at(t)
+        t_ready = self._monitor.restart_at(
+            t_detect, pool.inst.chip.startup_s, ev.jitter)
+        return [(t_detect, "reap", pool, inst, t_ready)]
+
+    def _fault_crash_decoder(self, t: float, d):
+        """Decode-side crash teardown: purge the paged KV store (audited
+        clean), restart lost prefill work from the central queue, and
+        re-enter residents exactly once — with recovery on after
+        detection + a re-prefill shrunk by any surviving prefix-cache
+        copy; with recovery off only after the client timeout, with the
+        full context recomputed."""
+        st = self.fault_stats
+        cfg = self.faults
+        g = self.fleet.groups[d.pool.spec.model]
+        victims = list(d.active)
+        for r in victims:
+            d.remove_active(r)
+        requeue_prefill = [r for r, _ in d.prefill_q] \
+            + [r for _, r in d.kv_spill]
+        d.prefill_q = []
+        d._pq_cache = None
+        d._iter_cache = None
+        d.kv_spill = []
+        d.oom_pending = []        # subset of active: already pulled out
+        if d.kv is not None:
+            d.kv.purge()
+            d.kv.check()          # a crash must leave the books clean
+        # prompts whose prefill/KV died on-box restart from the central
+        # queue: the KV is gone, so their pipeline genuinely re-runs
+        # (kv_ready is re-stamped at the *new* transfer completion)
+        for r in requeue_prefill:
+            r.deflect_tgt = None
+            r.t_kv_ready = -1.0
+            st.prefill_requeued += 1
+            self._wait_add(r)
+        v_pre = max(g.prefill.prof.v_prefill, 1e-9)
+        for r in victims:
+            r.n_evictions += 1
+            if r.kv_swap is d.kv:
+                r.kv_swap = None      # ticket died with the allocator
+            ctx = int(r.src.in_len + r.generated)
+            if cfg.recovery:
+                # self-healing re-entry: re-probe surviving decoders'
+                # prefix caches (the dead box is already non-ready) so
+                # the recompute only covers the uncached suffix
+                r.kv_prefix = None
+                r.kv_hit_tokens = 0
+                hit = 0
+                if self._kv_on:
+                    self._kv_lookup(g, r, t)
+                    hit = r.kv_hit_tokens
+                delay = cfg.detect_s + max(ctx - hit, 0) / v_pre
+            else:
+                delay = cfg.client_timeout_s + ctx / v_pre
+            r.decode_time += delay
+            st.residents_requeued += 1
+            entry = (t + delay, r)
+            self._pending_add(entry)
+            self._on_requeue(entry)
+
+    def _fault_reap(self, t: float, pool, inst, t_ready: float
+                    ) -> list[tuple]:
+        """Health-monitor detection fired: the husk leaves the books and
+        its warm replacement starts booting — the lost capacity shows up
+        in the planner's very next observation as missing supply instead
+        of waiting for queue backlog to build."""
+        self._cost_advance(t)
+        if inst in pool.instances:
+            pool.instances.remove(inst)
+        repl = self._spawn(pool, t_ready)
+        pool.instances.append(repl)
+        self.fault_stats.restarts += 1
+        for g in self.fleet.groups.values():
+            g._decode_cache = None
+            g._prefill_cache = None
+        if self.obs is not None:
+            self.obs.on_recovery(t, "restart", instance=inst.iid,
+                                 replacement=repl.iid, ready_t=t_ready,
+                                 pool=pool.spec.name)
+        self._after_scale(t)      # event engine schedules the wake
+        return []
+
+    def _link_wait(self, t: float) -> Optional[float]:
+        """KVC transfer attempted during a link outage.  Recovery on:
+        bounded retry with exponential backoff — the transfer departs at
+        the first retry past the window's end; None when the ladder is
+        exhausted inside the window (recompute-at-prefill fallback).
+        Recovery off: the sender is blind — the transfer vanishes into
+        the dead link and is retransmitted only on client timeout, so the
+        wait is whole timeout multiples, not the oracle remainder."""
+        cfg = self.faults
+        st = self.fault_stats
+        until = self._link_down_until
+        if not cfg.recovery:
+            wait = cfg.client_timeout_s
+            while t + wait < until:
+                wait += cfg.client_timeout_s
+            return wait
+        wait = 0.0
+        for i in range(cfg.max_retries):
+            st.kvc_retries += 1
+            wait += cfg.backoff0_s * (2.0 ** i)
+            if t + wait >= until:
+                st.kvc_retry_backoff_s += wait
+                return wait
+        return None
+
     # ------------------------------------------------------------------
     def _fleet_observation(self, t: float) -> FleetObservation:
         """Per-pool snapshots + per-model gateway aggregates: what the
@@ -2101,6 +2420,13 @@ class ClusterBase:
                                 count=len(insts), ready=len(ready))
             snap.idle = sum(1 for i in ready if i.idle and not i.draining)
             snap.draining = sum(1 for i in insts if i.draining)
+            if self._fault_eff:
+                # measured effective velocity under straggler windows —
+                # surfaced only on the self-healing path so the default
+                # observation stays byte-stable
+                perfs = [i.perf for i in ready if not i.draining]
+                if perfs:
+                    snap.eff_perf = float(sum(perfs) / len(perfs))
             if pool.spec.role == "prefill":
                 snap.queue_requests = sum(len(p.queue) for p in insts)
                 snap.inflight_tokens = sum(p.inflight_tokens()
@@ -2242,9 +2568,11 @@ class ClusterBase:
     def _cost_advance(self, t: float):
         """Advance the dollar-billing integral to ``t``.  Exact because
         fleet membership only changes inside ``_scale`` (which settles
-        the closing segment before touching any pool) and ``_report``
-        (the final segment): between those points the per-pool cost rate
-        is constant, so one multiply per pool per scale interval replaces
+        the closing segment before touching any pool), ``_report`` (the
+        final segment), and the chaos engine's crash/reap transitions
+        (``_fault_crash``/``_fault_reap``, which likewise settle before
+        mutating): between those points the per-pool cost rate is
+        constant, so one multiply per pool per scale interval replaces
         any per-tick/per-event accumulation."""
         dt = t - self._cost_t0
         if dt > 0.0:
@@ -2326,6 +2654,8 @@ class ClusterBase:
                          preemptions=list(self.preemption_log),
                          kv=self.kv_stats.summary() if self._kv_on else {},
                          gw=self.gw_stats.summary() if self._gw_on else {},
+                         faults=self.fault_stats.summary()
+                         if self.faults is not None else {},
                          n_events=getattr(self, "n_events", 0),
                          n_deflected=self.n_deflected,
                          cost_dollars=self.cost_dollars,

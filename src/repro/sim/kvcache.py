@@ -547,6 +547,27 @@ class KVAllocator:
             self.stats.swap_ins += 1
         return n
 
+    # ---- crash teardown ------------------------------------------------
+    def purge(self):
+        """Crash teardown (sim.faults): the box's memory is gone, so every
+        allocation, arrival pin, cached prefix, and swap ticket is
+        discarded in one sweep.  Leaves the allocator empty-but-consistent
+        — ``check()`` passes, ``busy`` releases — so a dead husk audits
+        clean while it waits for the health monitor to reap it.  In-flight
+        arrivals that pinned a prefix here fall through to the existing
+        pin-lost path (``unpin`` tolerates the missing pin)."""
+        for rid in list(self.pins):
+            self.unpin(rid)
+        for rid in list(self.allocs):
+            self.drop(rid)
+        for key in list(self.sessions):
+            self._drop_entry(key)
+        self.dram_free += sum(self.tickets.values())
+        self.tickets.clear()
+        # pins drained first, so no entry can have been parked as retired
+        self._retired.clear()
+        self._mutated()
+
     # ---- invariants ----------------------------------------------------
     def check(self):
         """Double-entry audit: re-derive every refcount from allocations +

@@ -137,7 +137,8 @@ def run_spec(spec: ExperimentSpec,
         predictor=OutputPredictor(spec.predictor_accuracy, spec.seed),
         dt=spec.dt, preemption=spec.preemption,
         max_instances=spec.max_instances,
-        snapshot_interval=spec.snapshot_interval)
+        snapshot_interval=spec.snapshot_interval,
+        faults=spec.faults)
     if spec.telemetry:
         # flight recorder (repro.obs): pure observer attached before the
         # run so every hook site sees it; the default-off path above never
@@ -222,7 +223,8 @@ def run_policy(policy_name: str, trace_name: str = "mixed",
                shared_prefix_prob: float = 0.0,
                shared_prefix_len: int = 512,
                shared_prefix_count: int = 8,
-               telemetry: bool = False) -> SimReport:
+               telemetry: bool = False,
+               faults: Optional[dict] = None) -> SimReport:
     """The classic single-pool experiment, desugared to a one-pool spec.
     Kept byte-stable with the pre-pool control plane (golden fixtures).
     The KV-tier knobs (``block_size``/``hbm_frac``/``offload_gb``/
@@ -231,7 +233,9 @@ def run_policy(policy_name: str, trace_name: str = "mixed",
     gateway (``gateway``/``kv_alloc``, core.gateway) and the Zipf shared-
     prompt workload knobs (``shared_prefix_*``, sim.traces) default to
     the legacy flat-byte-counter, single-turn, wholesale-conversion,
-    owner-steered behavior."""
+    owner-steered behavior.  ``faults`` (a ``sim.faults.FaultConfig``
+    dict) arms the chaos engine; None keeps the run fault-free and
+    byte-identical."""
     n_conv = n_convertible if policy_name == "tokenscale" else 0
     fleet_spec = single_pool_fleet(model, chip, tp, trace=trace_name,
                                    rps=rps, n_convertible=n_conv,
@@ -251,7 +255,7 @@ def run_policy(policy_name: str, trace_name: str = "mixed",
         fleet=fleet_spec, policy=policy_name, engine=engine,
         preemption=preemption, duration=duration, seed=seed, dt=dt,
         predictor_accuracy=predictor_accuracy, max_instances=max_instances,
-        telemetry=telemetry)
+        telemetry=telemetry, faults=faults)
     profiles = {p.name: prof for p in fleet_spec.pools} if prof else None
     return run_spec(spec, profiles=profiles)
 

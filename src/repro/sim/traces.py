@@ -108,6 +108,26 @@ def _lognormal(rng, mean, sigma, lo, hi, size):
     return np.clip(rng.lognormal(mu, sigma, size), lo, hi).astype(int)
 
 
+#: prime salts for the independent RNG substreams layered over a seeded
+#: trace.  Each decorating pass (and the fault injector) derives its own
+#: stream from the base seed + a distinct prime, so turning any knob on
+#: never perturbs the arrival times or lengths — nor any *other* knob's
+#: draws — of an existing trace.
+SALT_PRIORITY = 104729
+SALT_SESSION = 15485863
+SALT_SHARED_PREFIX = 2750159
+SALT_FAULTS = 6291469
+
+
+def substream(seed: int, salt: int) -> np.random.RandomState:
+    """An RNG stream independent of the base trace stream (and of every
+    other salt's stream): ``RandomState((seed + salt) % 2**31)``.  The
+    construction is part of the byte-identical-goldens contract — all
+    existing decorator streams were built exactly this way, so routing
+    them through this helper changes no draw."""
+    return np.random.RandomState((seed + salt) % (2 ** 31))
+
+
 def assign_priorities(reqs: list[TraceRequest],
                       priority_mix: dict[int, float] | None,
                       seed: int = 0) -> list[TraceRequest]:
@@ -119,7 +139,7 @@ def assign_priorities(reqs: list[TraceRequest],
     classes = sorted(priority_mix)
     w = np.array([priority_mix[c] for c in classes], dtype=float)
     w /= w.sum()
-    rng = np.random.RandomState((seed + 104729) % (2 ** 31))
+    rng = substream(seed, SALT_PRIORITY)
     draws = rng.choice(len(classes), size=len(reqs), p=w)
     for r, k in zip(reqs, draws):
         r.priority = int(classes[k])
@@ -142,7 +162,7 @@ def assign_sessions(reqs: list[TraceRequest], session_prob: float,
     sessions stay joinable (oldest retired first)."""
     if session_prob <= 0.0:
         return reqs
-    rng = np.random.RandomState((seed + 15485863) % (2 ** 31))
+    rng = substream(seed, SALT_SESSION)
     open_sessions: list[list] = []   # [sid, last_t, kv_len]
     next_sid = 0
     for r in sorted(reqs, key=lambda r: (r.t, r.rid)):
@@ -185,7 +205,7 @@ def assign_shared_prefixes(reqs: list[TraceRequest], prob: float,
     the knob never perturbs an existing seeded trace."""
     if prob <= 0.0:
         return reqs
-    rng = np.random.RandomState((seed + 2750159) % (2 ** 31))
+    rng = substream(seed, SALT_SHARED_PREFIX)
     lens = rng.randint(max(prefix_len // 2, 1),
                        prefix_len + prefix_len // 2 + 1, size=n_prompts)
     w = 1.0 / np.arange(1, n_prompts + 1) ** zipf_a

@@ -1,0 +1,293 @@
+"""Chaos-engine tests: seeded fault injection + the self-healing path.
+
+Covers the determinism contract (the fault substream never perturbs
+arrivals — the byte-identical-goldens construction), the schedule/target
+machinery (``sim.faults``), the ``fault_summary`` degradation contract,
+the spec round trip, conservation under randomized crash schedules on
+both engines (every arrival finishes or is accounted exactly once, KV
+allocators audit clean), and the recovery gradient the
+``chaos_recovery.json`` golden pins.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import ExperimentSpec, OutputPredictor, PerModelFleetPolicy
+from repro.core import fleet as fleet_mod
+from repro.core.autoscaler import build_policy
+from repro.core.fleet import single_pool_fleet
+from repro.sim.faults import (FAULT_KINDS, FaultConfig, FaultStats,
+                              HealthMonitor, build_schedule, pick_target)
+from repro.sim.runner import build_fleet, build_traces, get_engine, run_policy
+from repro.sim.traces import SALT_FAULTS, substream, trace_stats
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "chaos_recovery.json")
+
+#: a small-but-busy fault mix used across the run-level tests
+FAULTS = dict(seed=0, crashes=2, stragglers=1, swap_degrades=1,
+              link_outages=1, t0=6.0)
+
+
+# ---------------------------------------------------------------------------
+# schedule / target machinery
+# ---------------------------------------------------------------------------
+
+def test_build_schedule_deterministic_and_sorted():
+    cfg = FaultConfig(seed=7, crashes=3, stragglers=2, swap_degrades=2,
+                      link_outages=1)
+    a = build_schedule(cfg, 60.0)
+    b = build_schedule(cfg, 60.0)
+    assert [(e.t, e.kind, e.role, e.pick) for e in a] == \
+        [(e.t, e.kind, e.role, e.pick) for e in b]
+    assert len(a) == 8
+    assert all(a[i].t <= a[i + 1].t for i in range(len(a) - 1))
+    for e in a:
+        assert e.kind in FAULT_KINDS
+
+
+def test_build_schedule_window():
+    cfg = FaultConfig(seed=1, crashes=10, t0=5.0)
+    for e in build_schedule(cfg, 100.0):
+        assert 5.0 <= e.t <= 60.0          # t1 defaults to 60% of horizon
+    cfg = FaultConfig(seed=1, crashes=10, t0=5.0, t1=12.0)
+    for e in build_schedule(cfg, 100.0):
+        assert 5.0 <= e.t <= 12.0
+
+
+def test_build_schedule_uses_independent_substream():
+    """The schedule draw consumes only the SALT_FAULTS stream — drawing
+    it must not advance any other stream's state (independence is by
+    construction: separate RandomState objects)."""
+    probe = substream(3, SALT_FAULTS)
+    expect = [float(probe.random_sample()) for _ in range(4)]
+    rng = np.random.RandomState((3 + SALT_FAULTS) % (2 ** 31))
+    assert [float(rng.random_sample()) for _ in range(4)] == expect
+
+
+class _Inst:
+    def __init__(self, iid):
+        self.iid = iid
+
+
+def test_pick_target():
+    insts = [_Inst(3), _Inst(1), _Inst(2)]
+    import dataclasses
+    from repro.sim.faults import FaultEvent
+    ev = FaultEvent(t=0.0, kind="crash", pick=0.0)
+    assert pick_target(ev, insts).iid == 1          # sorted by iid
+    assert pick_target(dataclasses.replace(ev, pick=0.999), insts).iid == 3
+    assert pick_target(dataclasses.replace(ev, pick=0.5), insts).iid == 2
+    assert pick_target(ev, []) is None
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        FaultConfig(crashes=-1)
+    with pytest.raises(ValueError):
+        FaultConfig(straggler_factor=0.0)
+    with pytest.raises(ValueError):
+        FaultConfig(swap_factor=1.5)
+    with pytest.raises(ValueError):
+        FaultConfig(roles=("convertible",))
+    with pytest.raises(ValueError):
+        FaultConfig.from_dict({"crashes": 1, "nonsense": True})
+    assert FaultConfig.from_dict({"crashes": 1}).crashes == 1
+
+
+def test_health_monitor_detects_at_next_probe():
+    hm = HealthMonitor(cadence=1.0)
+    assert hm.detect_at(3.2) == 4.0
+    assert hm.detect_at(4.0) == 5.0        # never the same instant
+    assert hm.detections == 2
+    assert hm.restart_at(4.0, 5.0, 0.8) == pytest.approx(8.0)
+
+
+def test_fault_stats_summary_schema():
+    s = FaultStats().summary()
+    assert all(v == 0 for v in s.values())
+    assert set(s) == {"crashes", "restarts", "residents_requeued",
+                      "prefill_requeued", "kvc_retries",
+                      "kvc_retry_backoff_s", "kvc_fallbacks",
+                      "straggler_windows", "swap_degrade_windows",
+                      "link_down_windows", "skipped"}
+
+
+# ---------------------------------------------------------------------------
+# spec plumbing
+# ---------------------------------------------------------------------------
+
+def test_spec_faults_roundtrip():
+    fs = single_pool_fleet(trace="azure_conv", rps=4.0)
+    spec = ExperimentSpec(fleet=fs, duration=10.0, faults=dict(FAULTS))
+    d = spec.to_dict()
+    assert d["faults"] == FAULTS
+    back = ExperimentSpec.from_dict(json.loads(json.dumps(d)))
+    assert back.faults == FAULTS
+    # faults unset (or falsy) -> the pre-chaos schema, byte-for-byte
+    off = ExperimentSpec(fleet=fs, duration=10.0)
+    assert "faults" not in off.to_dict()
+    assert "faults" not in ExperimentSpec(fleet=fs, duration=10.0,
+                                          faults={}).to_dict()
+
+
+def test_core_fleet_reexports_health_monitor():
+    """The control-plane pieces are reachable from the fleet layer
+    (lazily, to avoid the core<->sim import cycle)."""
+    assert fleet_mod.HealthMonitor is HealthMonitor
+    assert fleet_mod.FaultConfig is FaultConfig
+    with pytest.raises(AttributeError):
+        fleet_mod.NoSuchThing
+
+
+# ---------------------------------------------------------------------------
+# arrivals stay byte-identical (the substream contract, satellite of PR 10)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["events", "fluid"])
+def test_faults_do_not_perturb_arrivals(engine):
+    """Same seed, faults on vs off: the arrival stream — times, lengths,
+    priorities, session assignment — is identical, because the fault
+    schedule draws from its own RNG substream."""
+    kw = dict(duration=20.0, rps=6.0, seed=4, engine=engine,
+              priority_mix={0: 0.3, 1: 0.7}, session_prob=0.3)
+    off = run_policy("tokenscale", "azure_conv", **kw)
+    on = run_policy("tokenscale", "azure_conv", faults=dict(FAULTS), **kw)
+    key = lambda rep: sorted(
+        (r.src.rid, r.src.t, r.src.in_len, r.src.out_len, r.priority,
+         r.src.session, r.src.prefix_len)
+        for r in rep.requests)
+    assert key(off) == key(on)
+
+
+# ---------------------------------------------------------------------------
+# fault_summary degradation contract
+# ---------------------------------------------------------------------------
+
+def test_fault_summary_degrades_to_zero_schema():
+    rep = run_policy("tokenscale", "azure_conv", duration=10.0, rps=4.0,
+                     engine="events")
+    s = rep.fault_summary()
+    assert s == FaultStats().summary()
+    assert rep.faults == {}
+
+
+def test_fault_summary_counts_injections():
+    rep = run_policy("tokenscale", "azure_conv", duration=25.0, rps=6.0,
+                     seed=0, engine="events", faults=dict(FAULTS))
+    s = rep.fault_summary()
+    assert set(s) == set(FaultStats().summary())
+    fired = s["crashes"] + s["straggler_windows"] + \
+        s["swap_degrade_windows"] + s["link_down_windows"] + s["skipped"]
+    assert fired == 5                      # every scheduled event resolved
+    assert s["restarts"] == s["crashes"]   # recovery defaults on
+
+
+# ---------------------------------------------------------------------------
+# conservation under randomized crash schedules (both engines)
+# ---------------------------------------------------------------------------
+
+def _run_cluster(engine, faults, seed, duration=22.0, rps=8.0):
+    """Build the engine by hand (mirroring run_spec) so the test can
+    audit cluster internals after the run."""
+    fleet_spec = single_pool_fleet("llama31_8b", "a100", 1,
+                                   trace="burstgpt1", rps=rps,
+                                   n_convertible=1,
+                                   priority_mix={0: 0.2, 1: 0.6, 2: 0.2},
+                                   block_size=16, prefix_cache=True)
+    spec = ExperimentSpec(fleet=fleet_spec, policy="tokenscale",
+                          engine=engine, preemption="evict-lowest",
+                          duration=duration, seed=seed, faults=faults)
+    fleet = build_fleet(spec.fleet, max_decoders=spec.max_instances)
+    trace = build_traces(spec)
+    stats = trace_stats(trace)
+    policies = {}
+    for model, g in fleet.groups.items():
+        policies[model] = build_policy(
+            spec.policy, g.prefill.prof, decode_prof=g.decode.prof,
+            mean_in=stats.mean_in, mean_out=stats.mean_out,
+            n_convertible=g.convertible.spec.init if g.convertible else 0)
+    cl = get_engine(engine)(
+        fleet, policy=PerModelFleetPolicy(policies),
+        predictor=OutputPredictor(spec.predictor_accuracy, spec.seed),
+        dt=spec.dt, preemption=spec.preemption,
+        max_instances=spec.max_instances, faults=spec.faults)
+    rep = cl.run(trace, spec.duration + spec.extra_horizon)
+    return cl, rep, trace
+
+
+@pytest.mark.parametrize("engine", ["events", "fluid"])
+@pytest.mark.parametrize("recovery", [True, False])
+def test_conservation_under_crashes(engine, recovery):
+    """Randomized crash/straggler schedules: every arrival is accounted
+    exactly once (finished or in flight at the horizon — crashes neither
+    drop nor duplicate requests), and every live KV allocator + instance
+    aggregate audits clean after the run."""
+    total_crashes = 0
+    for fseed in (0, 11, 23):
+        faults = dict(seed=fseed, crashes=3, stragglers=1, swap_degrades=1,
+                      link_outages=1, t0=4.0, recovery=recovery)
+        cl, rep, trace = _run_cluster(engine, faults, seed=fseed)
+        rids = [r.src.rid for r in rep.requests]
+        assert len(rids) == len(set(rids)), (engine, recovery, fseed)
+        assert len(rids) == len(trace), (engine, recovery, fseed)
+        for inst in cl.prefillers + cl.decoders + cl.convertibles:
+            inst.check_aggregates()
+            if getattr(inst, "kv", None) is not None:
+                inst.kv.check()
+        total_crashes += cl.fault_stats.crashes
+    assert total_crashes > 0               # the fuzz actually crashed boxes
+
+
+@pytest.mark.parametrize("engine", ["events", "fluid"])
+def test_crash_frees_kv_and_reenters_with_prefix_reuse(engine):
+    """A decode crash purges the box's allocator (audits clean, empty)
+    and its residents re-enter decode exactly once — finished output
+    token counts are exact on the event engine even for requeued
+    residents."""
+    faults = dict(seed=19, crashes=2, stragglers=0, t0=4.0,
+                  roles=("decode",), recovery=True)
+    cl, rep, trace = _run_cluster(engine, faults, seed=19)
+    assert cl.fault_stats.crashes >= 1
+    assert cl.fault_stats.restarts == cl.fault_stats.crashes
+    assert cl.fault_stats.residents_requeued >= 1
+    if engine == "events":
+        for r in rep.requests:
+            if r.t_finish >= 0:
+                assert float(r.generated).is_integer()
+                assert int(r.generated) == r.src.out_len
+
+
+# ---------------------------------------------------------------------------
+# the recovery gradient (the chaos_recovery.json acceptance)
+# ---------------------------------------------------------------------------
+
+def test_golden_pins_recovery_gradient():
+    """The committed golden shows recovery-on strictly beating
+    recovery-off on class-0 SLO attainment AND p99 TTFT on both engines
+    (regen_golden.py asserts the same at regeneration time, so the
+    fixture can never pin a regression)."""
+    g = json.load(open(GOLDEN))
+    for eng, rows in g["engines"].items():
+        rec, blind = rows["recovery"], rows["norecovery"]
+        assert rec["class0"]["slo_attainment"] > \
+            blind["class0"]["slo_attainment"], eng
+        assert rec["ttft_p99"] < blind["ttft_p99"], eng
+        assert rec["faults"]["restarts"] == rec["faults"]["crashes"] > 0
+        assert blind["faults"]["restarts"] == 0
+
+
+def test_straggler_feeds_measured_velocity():
+    """Under a straggler window with recovery on, the planner sees the
+    pool's measured effective velocity (PoolSnapshot.eff_perf < 1) and
+    inflates targets; the run completes with the window opened and
+    closed."""
+    faults = dict(seed=19, crashes=0, stragglers=2, straggler_dur=8.0,
+                  t0=4.0, recovery=True)
+    rep = run_policy("tokenscale", "burstgpt1", duration=30.0, rps=8.0,
+                     seed=0, engine="events", faults=faults)
+    s = rep.fault_summary()
+    assert s["straggler_windows"] + s["skipped"] == 2
+    assert s["straggler_windows"] >= 1
